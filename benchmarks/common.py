@@ -1,0 +1,25 @@
+"""Shared benchmark scaffolding: timed runs + CSV emission.
+
+Every benchmark prints ``name,us_per_call,derived`` rows — ``us_per_call``
+is measured wall time of the fabric code; ``derived`` is the modeled
+quantity the paper's figure reports (seconds on the virtual WAN clock,
+MB/s, etc.).
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+from typing import Callable, Tuple
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def timed(fn: Callable[[], float]) -> Tuple[float, float]:
+    t0 = time.perf_counter()
+    derived = fn()
+    return (time.perf_counter() - t0) * 1e6, derived
+
+
+def emit(name: str, us: float, derived) -> None:
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,84 @@
+"""Paper Figs 2+3 (IOzone write/read): XUFS vs the always-remote baseline.
+
+Write path: XUFS closes locally (write-behind) vs GPFS-WAN-analogue
+synchronous remote write.  Read path: first access (cold striped fetch) vs
+warm cache vs always-remote.  File sizes 1 MB -> 1 GB as in the paper;
+``derived`` is modeled MB/s on the virtual WAN.
+"""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import emit, timed
+
+MB = 1024 * 1024
+SIZES = [1 * MB, 16 * MB, 64 * MB, 256 * MB, 1024 * MB]
+
+
+def run() -> None:
+    from repro.core import Network, ussh_login
+
+    with tempfile.TemporaryDirectory() as td:
+        net = Network()
+        s = ussh_login("bench", net, td + "/h", td + "/s")
+        for size in SIZES:
+            label = f"{size // MB}M"
+            payload = b"\x5a" * size
+
+            # ---- XUFS write: local close + async drain ------------------
+            def xufs_write():
+                c0 = net.clock
+                with s.client.open(f"home/io/w_{label}", "w") as f:
+                    f.write(payload)
+                blocked = net.clock - c0          # what the app saw: ~0
+                s.client.sync()                   # drain off the critical path
+                return blocked
+
+            us, blocked = timed(xufs_write)
+            emit(f"fig2/xufs_write_{label}_app_blocked_wan_s", us,
+                 "local" if blocked < 1e-6 else round(blocked, 4))
+
+            # ---- remote-synchronous write (GPFS-WAN analogue) -----------
+            def remote_write():
+                c0 = net.clock
+                s.client.transfer.send("site", "home", payload,
+                                       max_stripes=1)
+                s.server.store.put(s.token, f"home/io/r_{label}", payload)
+                return size / MB / (net.clock - c0)
+
+            us, mbps = timed(remote_write)
+            emit(f"fig2/remote_write_{label}_MBps", us, round(mbps, 1))
+
+            # ---- XUFS cold read (striped whole-file fetch) ---------------
+            s.server.store.put(s.token, f"home/io/rd_{label}", payload)
+
+            def cold_read():
+                c0 = net.clock
+                with s.client.open(f"home/io/rd_{label}") as f:
+                    f.read()
+                return size / MB / (net.clock - c0)
+
+            us, mbps = timed(cold_read)
+            emit(f"fig3/xufs_read_cold_{label}_MBps", us, round(mbps, 1))
+
+            # ---- XUFS warm read (cache hit: local parallel FS speed) -----
+            def warm_read():
+                c0 = net.clock
+                with s.client.open(f"home/io/rd_{label}") as f:
+                    f.read()
+                dt = net.clock - c0
+                return size / MB / dt if dt > 0 else float("inf")
+
+            us, mbps = timed(warm_read)
+            emit(f"fig3/xufs_read_warm_{label}_local", us,
+                 "local" if mbps == float("inf") else round(mbps, 1))
+
+            # ---- always-remote read (single-stream, per-open) -----------
+            def remote_read():
+                c0 = net.clock
+                s.client.transfer.send("home", "site", payload,
+                                       max_stripes=1)
+                return size / MB / (net.clock - c0)
+
+            us, mbps = timed(remote_read)
+            emit(f"fig3/remote_read_{label}_MBps", us, round(mbps, 1))

@@ -1,0 +1,52 @@
+"""Beyond-paper: roofline table from the dry-run artifacts.
+
+Reads experiments/artifacts/*.json (produced by ``python -m
+repro.launch.dryrun --all --mesh both``) and emits one row per cell:
+``derived`` = dominant-term milliseconds; plus the compute-roofline
+fraction.  EXPERIMENTS.md §Roofline is generated from the same data.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import emit
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "artifacts")
+
+
+def load_artifacts():
+    arts = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        with open(path) as f:
+            arts.append(json.load(f))
+    return arts
+
+
+def run() -> None:
+    arts = load_artifacts()
+    if not arts:
+        emit("roofline/no_artifacts_found", 0.0, 0)
+        return
+    n_ok = 0
+    worst = None
+    for a in arts:
+        r = a["roofline"]
+        variant = "opt" if a.get("tag") == "opt" else "base"
+        if a.get("tag") not in ("", None, "opt"):
+            continue
+        cell = f"{a['arch']}/{a['shape']}/{a['mesh']}/{variant}"
+        emit(f"roofline/{cell}/dominant_{r['dominant']}_ms", 0.0,
+             round(r["step_lower_bound_s"] * 1e3, 2))
+        emit(f"roofline/{cell}/compute_fraction", 0.0,
+             round(r["roofline_fraction_compute"], 4))
+        if variant == "base":
+            n_ok += 1
+            frac = r["roofline_fraction_compute"]
+            if worst is None or frac < worst[1]:
+                worst = (cell, frac)
+    emit("roofline/cells_compiled", 0.0, n_ok)
+    if worst:
+        emit("roofline/worst_cell", 0.0, f"{worst[0]}@{worst[1]:.3f}")

@@ -1,0 +1,29 @@
+"""Benchmark driver: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``us_per_call`` measures the real
+fabric code; ``derived`` is the modeled figure-of-merit (virtual-WAN
+seconds / MB/s / fractions), deterministic across runs.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import (
+        table1_sizes, fig23_iozone, fig4_build, fig5_largefile,
+        sharing_census, roofline,
+    )
+
+    for mod in (table1_sizes, fig23_iozone, fig4_build, fig5_largefile,
+                sharing_census, roofline):
+        mod.run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Paper §2.2: file-sharing census — private-by-default namespaces.
+
+The paper found 1 of 1,964 users shared files.  XUFS's answer is private
+per-user namespaces: this benchmark creates N user sessions against one
+network and verifies (a) zero cross-user object visibility, (b) zero
+cross-user auth-token validity, and reports the census.
+"""
+from __future__ import annotations
+
+import tempfile
+
+from benchmarks.common import emit, timed
+
+N_USERS = 32
+
+
+def run() -> None:
+    from repro.core import Network, ussh_login, AuthError
+
+    with tempfile.TemporaryDirectory() as td:
+        net = Network()
+        sessions = []
+
+        def make_users():
+            for i in range(N_USERS):
+                s = ussh_login(f"user{i}", net, f"{td}/h{i}", f"{td}/s{i}",
+                               home_name=f"home{i}", site_name=f"site{i}")
+                s.server.store.put(s.token, f"home/private_{i}.dat",
+                                   b"secret" * 100)
+                sessions.append(s)
+            return len(sessions)
+
+        us, n = timed(make_users)
+        emit("sharing/users_created", us, n)
+
+        cross_visible = 0
+        cross_auth_ok = 0
+        for i, si in enumerate(sessions):
+            for j, sj in enumerate(sessions):
+                if i == j:
+                    continue
+                try:
+                    sj.server.store.get(si.token, f"home/private_{j}.dat")
+                    cross_auth_ok += 1
+                except (AuthError, FileNotFoundError):
+                    pass
+                got = si.server.store.listdir(si.token, "home/")
+                cross_visible += sum(1 for st in got
+                                     if st.path == f"home/private_{j}.dat")
+        emit("sharing/cross_user_reads", 0.0, cross_auth_ok)
+        emit("sharing/cross_user_listings", 0.0, cross_visible)
+        emit("sharing/private_fraction", 0.0,
+             1.0 if (cross_auth_ok + cross_visible) == 0 else 0.0)

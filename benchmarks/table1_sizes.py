@@ -1,0 +1,54 @@
+"""Paper Table 1: cumulative file-size distribution of the active store.
+
+The adaptation censuses the tensor objects a checkpoint of each assigned
+architecture puts in the home store (the analogue of TACC's scratch
+space), and reports the cumulative-bytes distribution plus the fraction of
+bytes that ride the striped path (>64 KB) — the paper's observation that
+9% of files hold 98.5% of bytes is what justifies striping + whole-file
+caching.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+
+
+def leaf_sizes_for_arch(arch: str):
+    import jax
+    from repro.configs import get_config
+    from repro.models import init_params
+
+    cfg = get_config(arch)
+    spec = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    return [int(np.prod(l.shape)) * l.dtype.itemsize
+            for l in jax.tree.leaves(spec)]
+
+
+BUCKETS = [(500 << 20, ">500M"), (400 << 20, ">400M"), (300 << 20, ">300M"),
+           (200 << 20, ">200M"), (100 << 20, ">100M"), (1 << 20, ">1M"),
+           (512 << 10, ">0.5M"), (256 << 10, ">0.25M")]
+
+
+def run() -> None:
+    from repro.configs import ARCH_IDS
+    from repro.core.striping import STRIPE_THRESHOLD
+
+    all_sizes = []
+
+    def census():
+        for arch in ARCH_IDS:
+            all_sizes.extend(leaf_sizes_for_arch(arch))
+        return len(all_sizes)
+
+    us, nfiles = timed(census)
+    sizes = np.asarray(all_sizes, np.float64)
+    total = sizes.sum()
+    emit("table1/census_objects", us, int(nfiles))
+    for threshold, label in BUCKETS:
+        frac_files = float((sizes > threshold).mean())
+        frac_bytes = float(sizes[sizes > threshold].sum() / total)
+        emit(f"table1/bytes_frac_{label}", 0.0, round(frac_bytes, 4))
+        emit(f"table1/files_frac_{label}", 0.0, round(frac_files, 4))
+    striped = float(sizes[sizes > STRIPE_THRESHOLD].sum() / total)
+    emit("table1/bytes_on_striped_path", 0.0, round(striped, 6))

@@ -1,0 +1,64 @@
+"""Quickstart: the whole system in ~60 lines.
+
+Mount a home namespace over the simulated WAN, materialize a dataset,
+train a tiny Qwen3-family model with write-behind checkpointing, then
+serve a few requests from the trained weights.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import os
+import sys
+import tempfile
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import Network, ussh_login
+from repro.config import RunConfig, ShapeConfig, OptimConfig
+from repro.configs import get_tiny_config
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import SyntheticCorpus, DataPipeline
+from repro.serve.engine import ServeEngine, Request
+from repro.train import Trainer
+
+
+def main() -> None:
+    with tempfile.TemporaryDirectory() as td:
+        # 1. USSH login: personal file server at "home", pod site mounts it
+        net = Network()
+        s = ussh_login("scientist", net, td + "/home", td + "/site",
+                       mounts={"home/": ["home/scratch/"]})
+
+        # 2. input data lives in the home space; the pod reads it through
+        #    the whole-object cache + prefetcher
+        cfg = get_tiny_config("qwen3-4b")
+        SyntheticCorpus(s.client, "home/data", seed=0,
+                        vocab=cfg.vocab_size,
+                        shard_tokens=8192).materialize(2)
+        pipe = DataPipeline(s.client, "home/data", cfg, batch=4, seq=32,
+                            n_shards=2)
+
+        # 3. train with write-behind checkpoints (WAL -> striped -> home)
+        run = RunConfig(model=cfg,
+                        shape=ShapeConfig("quick", "train", 32, 4),
+                        optim=OptimConfig(lr=1e-3, warmup_steps=5,
+                                          total_steps=100))
+        ckpt = CheckpointManager(s.client, "home/ckpt")
+        trainer = Trainer(run, pipe, ckpt, ckpt_every=10)
+        result = trainer.train(20)
+        print(f"loss: {result.losses[0]:.3f} -> {result.losses[-1]:.3f}  "
+              f"checkpoints at {result.checkpoints}")
+        print(f"virtual WAN time: {net.clock:.2f}s, "
+              f"bytes shipped: {net.bytes_sent:,}")
+
+        # 4. serve from the trained weights (continuous batching)
+        engine = ServeEngine(cfg, trainer.params, slots=2, max_len=64)
+        for rid, prompt in enumerate(([1, 2, 3], [9, 8, 7, 6])):
+            engine.add_request(Request(rid=rid, prompt=prompt,
+                                       max_new_tokens=8))
+        engine.run_until_done()
+        for rid in (0, 1):
+            print(f"request {rid}: {engine.requests[rid].output}")
+
+
+if __name__ == "__main__":
+    main()

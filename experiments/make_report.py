@@ -1,0 +1,80 @@
+"""Generate the EXPERIMENTS.md §Dry-run + §Roofline tables from artifacts.
+
+Usage: PYTHONPATH=src python experiments/make_report.py > experiments/tables.md
+"""
+import glob
+import json
+import os
+import sys
+
+ART = os.path.join(os.path.dirname(__file__), "artifacts")
+HBM = 16e9
+
+
+def load():
+    base, opt = {}, {}
+    for p in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        a = json.load(open(p))
+        key = (a["arch"], a["shape"], a["mesh"])
+        (opt if a.get("tag") == "opt" else base)[key] = a
+    return base, opt
+
+
+def fit(a):
+    m = a["memory"]
+    used = ((m["temp_size_in_bytes"] or 0)
+            + (m["argument_size_in_bytes"] or 0)) / 1e9
+    return used, "fits" if used < 16.0 else "OVER"
+
+
+def main():
+    base, opt = load()
+    print("### Dry-run matrix (single-pod 256 + multi-pod 512 chips)\n")
+    print("| arch | shape | mesh | policy | GB/dev (base) | GB/dev (opt) |"
+          " compile_s |")
+    print("|---|---|---|---|---|---|---|")
+    for key in sorted(base):
+        a = base[key]
+        o = opt.get(key)
+        gb_b, f_b = fit(a)
+        gb_o, f_o = fit(o) if o else (None, "-")
+        gtxt = f"{gb_o:.1f} ({f_o})" if o else "-"
+        print(f"| {key[0]} | {key[1]} | {key[2]} | {a['policy']} "
+              f"| {gb_b:.1f} ({f_b}) | {gtxt} | {a['compile_s']:.0f} |")
+
+    print("\n### Roofline terms (single-pod; seconds/step lower bounds)\n")
+    print("| arch | shape | variant | compute_s | memory_s | collective_s |"
+          " dominant | compute-roofline frac | useful-flops ratio |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for key in sorted(base):
+        if key[2] != "single":
+            continue
+        for label, src in (("paper-faithful", base), ("optimized", opt)):
+            a = src.get(key)
+            if a is None:
+                continue
+            r = a["roofline"]
+            ur = a.get("useful_flops_ratio")
+            print(f"| {key[0]} | {key[1]} | {label} "
+                  f"| {r['compute_s']:.3f} | {r['memory_s']:.3f} "
+                  f"| {r['collective_s']:.3f} | {r['dominant']} "
+                  f"| {r['roofline_fraction_compute']:.3f} "
+                  f"| {ur:.3f} |" if ur else "| - |")
+
+    print("\n### Multi-pod (2 pods / 512 chips) collective deltas\n")
+    print("| arch | shape | coll_s single | coll_s multi | pod-axis cost |")
+    print("|---|---|---|---|---|")
+    for key in sorted(base):
+        if key[2] != "single":
+            continue
+        m_key = (key[0], key[1], "multi")
+        if m_key not in base:
+            continue
+        cs = base[key]["roofline"]["collective_s"]
+        cm = base[m_key]["roofline"]["collective_s"]
+        print(f"| {key[0]} | {key[1]} | {cs:.3f} | {cm:.3f} "
+              f"| {cm - cs:+.3f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""XUFS core fabric: the paper's contribution as a composable library."""
+from repro.core.transport import (  # noqa: F401
+    Network, Endpoint, LinkModel, KeyPhrase, DisconnectedError, AuthError,
+    KB, MB, GB,
+)
+from repro.core.striping import (  # noqa: F401
+    plan_stripes, reassemble, StripePlan, StripedTransfer,
+    STRIPE_THRESHOLD, MIN_BLOCK, MAX_STRIPES,
+)
+from repro.core.store import HomeStore, ObjectStat  # noqa: F401
+from repro.core.cache import CacheSpace, CacheEntry  # noqa: F401
+from repro.core.oplog import MetaOpQueue, OpRecord  # noqa: F401
+from repro.core.callbacks import NotificationManager  # noqa: F401
+from repro.core.lease import LeaseManager  # noqa: F401
+from repro.core.namespace import XufsClient, XufsFile, Mount  # noqa: F401
+from repro.core.prefetch import Prefetcher  # noqa: F401
+from repro.core.session import Session, UserFileServer, ussh_login  # noqa: F401

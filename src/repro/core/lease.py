@@ -1,0 +1,71 @@
+"""Lease manager (paper §3.1): remote locks with TTL renewal.
+
+Locks on XUFS-mounted paths are forwarded to the file server; the lease
+manager renews them periodically so a crashed client's locks expire rather
+than orphan.  Files in *localized directories* use cache-space-local locks
+(the parallel FS's own locking in the paper).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Set
+
+from repro.core.store import HomeStore
+from repro.core.transport import DisconnectedError, Network
+
+DEFAULT_TTL = 30.0
+
+
+@dataclass
+class LeaseManager:
+    network: Network
+    client_name: str
+    server_name: str
+    store: HomeStore
+    owner: str
+    token: str = ""
+    ttl: float = DEFAULT_TTL
+    held: Set[str] = field(default_factory=set)
+    local_locks: Set[str] = field(default_factory=set)
+
+    def acquire(self, path: str, localized: bool = False) -> bool:
+        if localized:
+            if path in self.local_locks:
+                return True
+            self.local_locks.add(path)
+            return True
+        self.network.rpc(self.client_name, self.server_name, "lock_acquire")
+        ok = self.store.acquire_lock(self.token, path, self.owner, self.ttl,
+                                     self.network.clock)
+        if ok:
+            self.held.add(path)
+        return ok
+
+    def release(self, path: str) -> None:
+        if path in self.local_locks:
+            self.local_locks.discard(path)
+            return
+        if path in self.held:
+            try:
+                self.network.rpc(self.client_name, self.server_name,
+                                 "lock_release")
+                self.store.release_lock(self.token, path, self.owner)
+            except DisconnectedError:
+                pass   # lease will expire server-side
+            self.held.discard(path)
+
+    def renew_all(self) -> int:
+        """Periodic renewal; drops leases the server no longer honors."""
+        renewed = 0
+        for path in list(self.held):
+            try:
+                self.network.rpc(self.client_name, self.server_name,
+                                 "lock_renew")
+            except DisconnectedError:
+                return renewed
+            if self.store.renew_lock(self.token, path, self.owner, self.ttl,
+                                     self.network.clock):
+                renewed += 1
+            else:
+                self.held.discard(path)
+        return renewed

@@ -1,0 +1,278 @@
+"""XufsClient: the interposition seam (the paper's libxufs.so equivalent).
+
+Applications (the trainer, the serving engine, the data pipeline) perform
+all file access through this client.  Semantics per the paper:
+
+  * ``opendir`` materializes the remote listing into cache space (hidden
+    attribute files) and redirects directory ops locally;
+  * first ``open`` of a file fetches the WHOLE object (striped);
+  * mutating ops update the cache copy, append to the persisted meta-op
+    queue, and return — nothing blocks on the WAN;
+  * ``write`` accumulates in a shadow buffer; ``close`` enqueues one
+    aggregated store op (**last-close-wins**);
+  * callback invalidations mark entries stale; next access re-fetches;
+  * *localized directories*: new data never ships back to home;
+  * disconnected operation: reads serve from cache, writes queue.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.cache import (
+    CacheSpace, CacheEntry, EMPTY, VALID, DIRTY, INVALID,
+)
+from repro.core.callbacks import NotificationManager
+from repro.core.lease import LeaseManager
+from repro.core.oplog import MetaOpQueue, OpRecord
+from repro.core.store import HomeStore, ObjectStat
+from repro.core.striping import StripedTransfer
+from repro.core.transport import DisconnectedError, Network
+
+
+@dataclass
+class Mount:
+    prefix: str                      # namespace prefix, e.g. "home/"
+    server_name: str
+    store: HomeStore
+    token: str
+    localized: List[str] = field(default_factory=list)
+
+    def is_localized(self, path: str) -> bool:
+        return any(path.startswith(ld) for ld in self.localized)
+
+
+class XufsFile:
+    """An open file handle over the cache copy + shadow write buffer."""
+
+    def __init__(self, client: "XufsClient", path: str, mode: str):
+        assert mode in ("r", "w", "a", "rw")
+        self.client = client
+        self.path = path
+        self.mode = mode
+        self.closed = False
+        if "r" in mode or mode == "a":
+            base = client._ensure_cached(path, create_ok="w" in mode or
+                                         mode == "a")
+        else:
+            base = b""
+        self._buf = bytearray(base if mode != "w" else b"")
+        self._dirty = mode in ("w", "a")
+        self._pos = len(self._buf) if mode == "a" else 0
+
+    # ---- POSIX-ish surface -------------------------------------------------
+    def read(self, n: int = -1) -> bytes:
+        end = len(self._buf) if n < 0 else min(self._pos + n, len(self._buf))
+        out = bytes(self._buf[self._pos:end])
+        self._pos = end
+        return out
+
+    def write(self, data: bytes) -> int:
+        end = self._pos + len(data)
+        if end > len(self._buf):
+            self._buf.extend(b"\x00" * (end - len(self._buf)))
+        self._buf[self._pos:end] = data
+        self._pos = end
+        self._dirty = True
+        return len(data)
+
+    def seek(self, pos: int) -> None:
+        self._pos = pos
+
+    def close(self) -> None:
+        """Update the cache copy; enqueue ONE aggregated store op."""
+        if self.closed:
+            return
+        self.closed = True
+        if self._dirty:
+            self.client._close_write(self.path, bytes(self._buf))
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+
+class XufsClient:
+    def __init__(self, name: str, network: Network, cache_root: str,
+                 oplog_root: str, owner: str = "user"):
+        self.name = name
+        self.network = network
+        self.cache = CacheSpace(cache_root)
+        self.oplog = MetaOpQueue(oplog_root)
+        self.transfer = StripedTransfer(network)
+        self.mounts: Dict[str, Mount] = {}
+        self.notifiers: Dict[str, NotificationManager] = {}
+        self.leases: Dict[str, LeaseManager] = {}
+        self.owner = owner
+        self.cwd = ""
+
+    # ---- mounts -----------------------------------------------------------
+    def mount(self, prefix: str, server_name: str, store: HomeStore,
+              token: str, localized: Optional[List[str]] = None) -> Mount:
+        m = Mount(prefix=prefix, server_name=server_name, store=store,
+                  token=token, localized=localized or [])
+        self.mounts[prefix] = m
+        nm = NotificationManager(self.network, self.name, server_name,
+                                 store, self.cache, prefix=prefix)
+        nm.register(token)
+        self.notifiers[prefix] = nm
+        self.leases[prefix] = LeaseManager(
+            self.network, self.name, server_name, store, owner=self.owner,
+            token=token)
+        return m
+
+    def _mount_for(self, path: str) -> Mount:
+        for prefix in sorted(self.mounts, key=len, reverse=True):
+            if path.startswith(prefix):
+                return self.mounts[prefix]
+        raise FileNotFoundError(f"{path}: not under any XUFS mount")
+
+    # ---- cache fill ------------------------------------------------------
+    def _fetch(self, m: Mount, path: str) -> CacheEntry:
+        """Whole-object striped fetch into cache space."""
+        data, st = m.store.get(m.token, path)
+        self.transfer.send(m.server_name, self.name, data)
+        self.cache.misses += 1
+        return self.cache.store_data(path, data, st, state=VALID)
+
+    def _ensure_cached(self, path: str, create_ok: bool = False) -> bytes:
+        m = self._mount_for(path)
+        entry = self.cache.lookup(path)
+        if entry is not None and entry.state in (VALID, DIRTY):
+            self.cache.hits += 1
+            return self.cache.read_data(path)
+        try:
+            entry = self._fetch(m, path)
+            return self.cache.read_data(path)
+        except FileNotFoundError:
+            if create_ok:
+                return b""
+            raise
+        except DisconnectedError:
+            # disconnected operation: serve stale cache if we have bytes
+            if entry is not None and os.path.exists(
+                    self.cache.data_path(path)):
+                self.cache.hits += 1
+                return self.cache.read_data(path)
+            raise
+
+    # ---- file API ----------------------------------------------------------
+    def open(self, path: str, mode: str = "r") -> XufsFile:
+        return XufsFile(self, path, mode)
+
+    def _close_write(self, path: str, data: bytes) -> None:
+        m = self._mount_for(path)
+        st = ObjectStat(path=path, size=len(data), version=-2,
+                        mtime=self.network.clock)
+        prev = self.cache.lookup(path)
+        if prev is not None:
+            st.version = prev.stat.version
+        self.cache.store_data(path, data, st, state=DIRTY)
+        if not m.is_localized(path):
+            self.oplog.append("store", path, data)
+
+    def unlink(self, path: str) -> None:
+        m = self._mount_for(path)
+        entry = self.cache.lookup(path)
+        if entry is not None:
+            dp = self.cache.data_path(path)
+            if os.path.exists(dp):
+                os.remove(dp)
+            ap = self.cache.attr_path(path)
+            if os.path.exists(ap):
+                os.remove(ap)
+        if not m.is_localized(path):
+            self.oplog.append("delete", path)
+
+    def stat(self, path: str) -> Optional[ObjectStat]:
+        entry = self.cache.lookup(path)
+        if entry is not None and entry.state != INVALID:
+            return entry.stat     # served from the hidden attr file
+        m = self._mount_for(path)
+        st = m.store.stat(m.token, path)
+        self.network.rpc(self.name, m.server_name, "stat")
+        if st is not None:
+            self.cache.write_entry(CacheEntry(path=path, state=EMPTY,
+                                              stat=st))
+        return st
+
+    def opendir(self, path: str) -> List[ObjectStat]:
+        """Download the directory listing into cache space (paper §3.1)."""
+        m = self._mount_for(path)
+        stats = m.store.listdir(m.token, path)
+        meta_bytes = sum(64 + len(s.path) for s in stats)
+        self.network.rpc(self.name, m.server_name, "opendir", meta_bytes)
+        self.cache.populate_listing(stats)
+        return stats
+
+    def listdir_cached(self, path: str) -> List[CacheEntry]:
+        return self.cache.entries(path)
+
+    def chdir(self, path: str) -> int:
+        """cd into a mounted dir: triggers the parallel small-file prefetch."""
+        self.cwd = path
+        from repro.core.prefetch import Prefetcher
+        stats = self.opendir(path)
+        pf = Prefetcher(self)
+        return pf.prefetch_small(path, stats)
+
+    # ---- write-behind sync ---------------------------------------------------
+    def pump(self, max_ops: Optional[int] = None) -> int:
+        """Drain the meta-op queue to home (the background flusher tick)."""
+        applied = 0
+
+        def apply(rec: OpRecord, data: Optional[bytes]) -> None:
+            m = self._mount_for(rec.path)
+            if rec.op == "store":
+                assert data is not None
+                self.transfer.send(self.name, m.server_name, data)
+                st = m.store.put(m.token, rec.path, data)
+                cur = self.cache.lookup(rec.path)
+                if cur is not None and cur.state == DIRTY:
+                    self.cache.write_entry(CacheEntry(
+                        path=rec.path, state=VALID, stat=st))
+            elif rec.op == "delete":
+                self.network.rpc(self.name, m.server_name, "delete")
+                try:
+                    m.store.delete(m.token, rec.path)
+                except FileNotFoundError:
+                    pass
+
+        applied = self.oplog.flush(apply, max_ops=max_ops)
+        return applied
+
+    def sync(self) -> int:
+        """Blocking drain (the paper's post-crash sync tool)."""
+        total = 0
+        while True:
+            n = self.pump()
+            if not self.oplog.pending():
+                return total + n
+            if n == 0:
+                return total
+            total += n
+
+    # ---- consistency / recovery ----------------------------------------------
+    def pump_callbacks(self) -> int:
+        return sum(nm.pump() for nm in self.notifiers.values())
+
+    def reconnect(self) -> int:
+        """After a server crash/partition heals: re-register + revalidate."""
+        stale = 0
+        for prefix, nm in self.notifiers.items():
+            m = self.mounts[prefix]
+            stale += nm.reconnect(m.token)
+        return stale
+
+    # ---- locks -------------------------------------------------------------
+    def lock(self, path: str) -> bool:
+        m = self._mount_for(path)
+        return self.leases[m.prefix].acquire(path,
+                                             localized=m.is_localized(path))
+
+    def unlock(self, path: str) -> None:
+        m = self._mount_for(path)
+        self.leases[m.prefix].release(path)

@@ -1,0 +1,163 @@
+"""Persisted meta-operation queue (paper §3.1): the write-behind WAL.
+
+Every mutating operation appends a record and returns — nothing blocks on
+the WAN.  A flusher drains the queue in order to the home store; records
+are marked done only after the remote op succeeds, so a crash at any point
+replays safely (operations are idempotent: puts overwrite, deletes are
+tolerant).  ``replay()`` is the paper's post-crash sync tool.
+"""
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core.transport import DisconnectedError
+
+PENDING = "pending"
+DONE = "done"
+
+
+@dataclass
+class OpRecord:
+    seq: int
+    op: str               # "store" | "delete" | "setattr"
+    path: str
+    payload_file: Optional[str] = None   # shadow-file holding the data
+    status: str = PENDING
+
+    def to_json(self) -> Dict:
+        return {"seq": self.seq, "op": self.op, "path": self.path,
+                "payload_file": self.payload_file, "status": self.status}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "OpRecord":
+        return cls(**d)
+
+
+class MetaOpQueue:
+    """Append-only JSONL WAL + shadow-file directory."""
+
+    def __init__(self, root: str, compact_threshold: int = 512):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+        os.makedirs(os.path.join(root, "shadow"), exist_ok=True)
+        self.wal_path = os.path.join(root, "oplog.jsonl")
+        self.compact_threshold = compact_threshold
+        self._lines_written = 0
+        self._next_seq = self._recover_next_seq()
+
+    def _recover_next_seq(self) -> int:
+        last = 0
+        for rec in self.scan():
+            last = max(last, rec.seq)
+        return last + 1
+
+    # ---- append ----------------------------------------------------------
+    def shadow_path(self, seq: int) -> str:
+        return os.path.join(self.root, "shadow", f"{seq:012d}.bin")
+
+    def append(self, op: str, path: str,
+               data: Optional[bytes] = None) -> OpRecord:
+        seq = self._next_seq
+        self._next_seq += 1
+        payload_file = None
+        if data is not None:
+            payload_file = self.shadow_path(seq)
+            tmp = payload_file + ".tmp"
+            with open(tmp, "wb") as f:
+                f.write(data)
+            os.replace(tmp, payload_file)
+        rec = OpRecord(seq=seq, op=op, path=path, payload_file=payload_file)
+        with open(self.wal_path, "a") as f:
+            f.write(json.dumps(rec.to_json()) + "\n")
+            f.flush()
+            os.fsync(f.fileno())
+        self._lines_written += 1
+        return rec
+
+    def mark_done(self, rec: OpRecord) -> None:
+        rec.status = DONE
+        with open(self.wal_path, "a") as f:
+            f.write(json.dumps(rec.to_json()) + "\n")
+            f.flush()
+        self._lines_written += 1
+        if rec.payload_file and os.path.exists(rec.payload_file):
+            os.remove(rec.payload_file)
+        if (self._lines_written >= self.compact_threshold
+                and not getattr(self, "_compacting", False)):
+            self.compact()
+
+    # ---- scan / replay -----------------------------------------------------
+    def scan(self) -> List[OpRecord]:
+        """Latest state per seq, ascending (truncated/garbage lines skipped)."""
+        state: Dict[int, OpRecord] = {}
+        if not os.path.exists(self.wal_path):
+            return []
+        with open(self.wal_path) as f:
+            for line in f:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = OpRecord.from_json(json.loads(line))
+                except (json.JSONDecodeError, TypeError):
+                    continue  # torn write at crash tail
+                state[rec.seq] = rec
+        return [state[s] for s in sorted(state)]
+
+    def pending(self) -> List[OpRecord]:
+        # last-close-wins: only the newest pending store per path is shipped
+        recs = [r for r in self.scan() if r.status == PENDING]
+        newest: Dict[str, int] = {}
+        for r in recs:
+            if r.op == "store":
+                newest[r.path] = r.seq
+        out = []
+        for r in recs:
+            if r.op == "store" and newest.get(r.path) != r.seq:
+                # superseded by a later close; mark done without shipping
+                self.mark_done(r)
+                continue
+            out.append(r)
+        return out
+
+    def flush(self, apply_fn: Callable[[OpRecord, Optional[bytes]], None],
+              max_ops: Optional[int] = None) -> int:
+        """Drain pending ops through ``apply_fn`` (raises stop the drain).
+
+        Returns the number of ops successfully applied.
+        """
+        done = 0
+        for rec in self.pending():
+            data = None
+            if rec.payload_file:
+                if not os.path.exists(rec.payload_file):
+                    self.mark_done(rec)   # shadow lost after done-crash race
+                    continue
+                with open(rec.payload_file, "rb") as f:
+                    data = f.read()
+            try:
+                apply_fn(rec, data)
+            except DisconnectedError:
+                break   # WAN down: keep queueing (disconnected operation)
+            self.mark_done(rec)
+            done += 1
+            if max_ops is not None and done >= max_ops:
+                break
+        return done
+
+    def compact(self) -> None:
+        """Rewrite the WAL keeping only pending records."""
+        self._compacting = True
+        try:
+            recs = self.pending()
+            tmp = self.wal_path + ".tmp"
+            with open(tmp, "w") as f:
+                for rec in recs:
+                    f.write(json.dumps(rec.to_json()) + "\n")
+            os.replace(tmp, self.wal_path)
+            self._lines_written = len(recs)
+        finally:
+            self._compacting = False

@@ -1,0 +1,65 @@
+"""Parallel small-file pre-fetch (paper §3.3).
+
+On first ``chdir`` into a mounted directory, up to ``MAX_WORKERS`` (12)
+parallel streams fetch every file smaller than 64 KB.  The virtual clock is
+charged wave-by-wave (12 fetches proceed concurrently), which is what makes
+the paper's Fig. 4 source-build workload fast on first touch.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import List
+
+from repro.core.cache import VALID, DIRTY
+from repro.core.store import ObjectStat
+from repro.core.transport import DisconnectedError
+
+SMALL_FILE = 64 * 1024
+MAX_WORKERS = 12
+
+
+@dataclass
+class Prefetcher:
+    client: "XufsClient"          # noqa: F821 (circular-light)
+    max_workers: int = MAX_WORKERS
+    small_file: int = SMALL_FILE
+
+    def prefetch_small(self, prefix: str, stats: List[ObjectStat]) -> int:
+        cl = self.client
+        todo = []
+        for st in stats:
+            if st.is_dir or st.size >= self.small_file:
+                continue
+            entry = cl.cache.lookup(st.path)
+            if entry is not None and entry.state in (VALID, DIRTY) \
+                    and entry.stat.version >= st.version:
+                continue
+            todo.append(st)
+        if not todo:
+            return 0
+
+        m = cl._mount_for(todo[0].path)
+        fetched = 0
+        clock0 = cl.network.clock
+        wave_times: List[float] = []
+        for i in range(0, len(todo), self.max_workers):
+            wave = todo[i:i + self.max_workers]
+            t_wave = 0.0
+            for st in wave:
+                try:
+                    data, fresh = m.store.get(m.token, st.path)
+                except FileNotFoundError:
+                    continue
+                # each worker is an independent single stream; the wave's
+                # wall time is the max over its members.
+                t = cl.network.link.transfer_time(len(data), n_streams=1)
+                t_wave = max(t_wave, t)
+                cl.cache.store_data(st.path, data, fresh, state=VALID)
+                cl.cache.misses += 1
+                fetched += 1
+            wave_times.append(t_wave)
+        # charge the clock for the parallel waves (not the serial sum)
+        cl.network.clock = clock0 + sum(wave_times)
+        cl.network.rpc_count += fetched
+        cl.network.bytes_sent += sum(min(s.size, 10**12) for s in todo)
+        return fetched

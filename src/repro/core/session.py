@@ -1,0 +1,85 @@
+"""USSH session (paper §3.2): login, per-user file server, authenticated mount.
+
+``ussh_login`` mirrors the paper's flow: generate a short-lived
+<key, phrase>, start a personal user-space file server at the home
+endpoint, authenticate the remote side via the HMAC challenge, and return
+a client whose mounts ride the authenticated token.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from repro.core.namespace import XufsClient
+from repro.core.store import HomeStore
+from repro.core.transport import (
+    AuthError, Endpoint, KeyPhrase, Network, respond,
+)
+
+
+@dataclass
+class UserFileServer:
+    """Personal user-space file server bound to one user's home space."""
+
+    user: str
+    endpoint: Endpoint
+    store: HomeStore
+    restarts: int = 0
+
+    def crash(self) -> None:
+        """Simulate a server crash: drop auth state + subscriptions."""
+        self.store._authed_tokens.clear()
+        self.store._subscribers.clear()
+
+    def restart(self) -> None:
+        """The paper restarts the server from a crontab job on recovery."""
+        self.restarts += 1
+
+
+@dataclass
+class Session:
+    user: str
+    network: Network
+    server: UserFileServer
+    client: XufsClient
+    token: str
+
+    def remount(self, prefix: str, localized: Optional[List[str]] = None):
+        token = _authenticate(self.server)
+        self.token = token
+        self.client.mount(prefix, self.server.endpoint.name,
+                          self.server.store, token,
+                          localized=localized)
+
+
+def _authenticate(server: UserFileServer) -> str:
+    kp = server.store.keyphrase
+    return server.store.authenticate(lambda ch: respond(kp, ch))
+
+
+def ussh_login(user: str, network: Network, home_root: str,
+               site_root: str, *, home_name: str = "home",
+               site_name: str = "site",
+               mounts: Optional[Dict[str, List[str]]] = None) -> Session:
+    """Login from the personal system into a site; mount the home space.
+
+    ``mounts`` maps namespace prefix -> localized sub-prefixes.
+    """
+    home_ep = Endpoint(home_name, network)
+    Endpoint(site_name, network)
+    kp = KeyPhrase.generate()
+    store = HomeStore(os.path.join(home_root, user), endpoint=home_ep,
+                      keyphrase=kp)
+    server = UserFileServer(user=user, endpoint=home_ep, store=store)
+    # SSH-authenticated login, then challenge-auth the data connections
+    network.rpc(site_name, home_name, "ssh_login", encrypted=True)
+    token = _authenticate(server)
+    client = XufsClient(site_name, network,
+                        cache_root=os.path.join(site_root, user, "cache"),
+                        oplog_root=os.path.join(site_root, user, "oplog"),
+                        owner=user)
+    for prefix, localized in (mounts or {"home/": []}).items():
+        client.mount(prefix, home_name, store, token, localized=localized)
+    return Session(user=user, network=network, server=server, client=client,
+                   token=token)

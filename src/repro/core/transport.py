@@ -1,0 +1,150 @@
+"""Simulated WAN transport with a deterministic virtual clock.
+
+The container is one CPU process, so the *wire* is modeled while every
+protocol above it (striping, callbacks, leases, auth, WAL replay) is real
+code moving real bytes between in-process endpoints.
+
+Link model (paper context: TeraGrid 30 Gbps WAN, high RTT):
+  * per-stream throughput is TCP-window/RTT limited (``per_stream_bw``) —
+    the reason XUFS stripes transfers (§3.3);
+  * the aggregate link caps at ``link_bw``;
+  * every RPC pays one ``latency_s``.
+
+Failures: ``partition(a, b[, duration])`` makes RPCs raise
+:class:`DisconnectedError` until ``heal`` (or until the virtual clock passes
+the deadline) — this is how tests exercise XUFS disconnected operation.
+"""
+from __future__ import annotations
+
+import hashlib
+import hmac as hmac_mod
+import os
+import secrets
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+KB = 1024
+MB = 1024 * 1024
+GB = 1024 * 1024 * 1024
+
+
+class DisconnectedError(ConnectionError):
+    """The WAN link between two endpoints is down."""
+
+
+class AuthError(PermissionError):
+    """HMAC challenge failed."""
+
+
+@dataclass
+class LinkModel:
+    latency_s: float = 0.030          # one-way WAN latency (SDSC<->NCSA era)
+    per_stream_bw: float = 80 * MB    # TCP window-limited single stream
+    link_bw: float = 3.75 * GB        # 30 Gbps
+    crypto_bw: float = 25 * MB        # single-stream *encrypted* (SCP-like)
+
+    def transfer_time(self, nbytes: int, n_streams: int = 1,
+                      encrypted: bool = False) -> float:
+        if nbytes <= 0:
+            return self.latency_s
+        if encrypted:
+            eff = min(self.crypto_bw * max(n_streams, 1), self.link_bw)
+        else:
+            eff = min(self.per_stream_bw * max(n_streams, 1), self.link_bw)
+        return self.latency_s + nbytes / eff
+
+
+@dataclass
+class Network:
+    """Endpoint registry + virtual clock + partition schedule."""
+
+    link: LinkModel = field(default_factory=LinkModel)
+    clock: float = 0.0
+    bytes_sent: int = 0
+    rpc_count: int = 0
+    _partitions: Dict[Tuple[str, str], float] = field(default_factory=dict)
+    _endpoints: Dict[str, "Endpoint"] = field(default_factory=dict)
+
+    # ---- endpoints ----------------------------------------------------
+    def register(self, ep: "Endpoint") -> None:
+        self._endpoints[ep.name] = ep
+
+    def endpoint(self, name: str) -> "Endpoint":
+        return self._endpoints[name]
+
+    # ---- time ----------------------------------------------------------
+    def advance(self, seconds: float) -> None:
+        self.clock += max(seconds, 0.0)
+
+    # ---- failures --------------------------------------------------------
+    def partition(self, a: str, b: str, duration: float = float("inf")):
+        key = (min(a, b), max(a, b))
+        self._partitions[key] = self.clock + duration
+
+    def heal(self, a: str, b: str) -> None:
+        self._partitions.pop((min(a, b), max(a, b)), None)
+
+    def is_partitioned(self, a: str, b: str) -> bool:
+        key = (min(a, b), max(a, b))
+        until = self._partitions.get(key)
+        if until is None:
+            return False
+        if self.clock >= until:
+            del self._partitions[key]
+            return False
+        return True
+
+    # ---- data plane ------------------------------------------------------
+    def rpc(self, src: str, dst: str, method: str, payload_bytes: int = 0,
+            n_streams: int = 1, encrypted: bool = False) -> float:
+        """Account one RPC; returns the modeled elapsed seconds."""
+        if self.is_partitioned(src, dst):
+            raise DisconnectedError(f"{src} <-> {dst} partitioned")
+        dt = self.link.transfer_time(payload_bytes, n_streams, encrypted)
+        self.advance(dt)
+        self.bytes_sent += payload_bytes
+        self.rpc_count += 1
+        return dt
+
+
+@dataclass
+class Endpoint:
+    """A named party on the network (home workstation, pod host, ...)."""
+
+    name: str
+    network: Network
+
+    def __post_init__(self) -> None:
+        self.network.register(self)
+
+    def call(self, dst: str, method: str, payload_bytes: int = 0,
+             n_streams: int = 1, encrypted: bool = False) -> float:
+        return self.network.rpc(self.name, dst, method, payload_bytes,
+                                n_streams, encrypted)
+
+
+# ---------------------------------------------------------------------------
+# USSH-style <key, phrase> challenge authentication (paper §3.2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class KeyPhrase:
+    key: str
+    phrase: str
+
+    @classmethod
+    def generate(cls) -> "KeyPhrase":
+        return cls(key=secrets.token_hex(16), phrase=secrets.token_hex(16))
+
+
+def make_challenge() -> str:
+    return secrets.token_hex(16)
+
+
+def respond(kp: KeyPhrase, challenge: str) -> str:
+    return hmac_mod.new(kp.key.encode(), (challenge + kp.phrase).encode(),
+                        hashlib.sha256).hexdigest()
+
+
+def verify(kp: KeyPhrase, challenge: str, response: str) -> bool:
+    return hmac_mod.compare_digest(respond(kp, challenge), response)

@@ -1,0 +1,90 @@
+"""Batch construction & ShapeDtypeStruct specs for every (family, shape).
+
+Used by the smoke tests (real arrays), the data pipeline (synthetic shards)
+and launch/dryrun.py (``jax.ShapeDtypeStruct`` stand-ins — weak-type
+correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig, ShapeConfig, ENCDEC, VLM
+
+Batch = Dict[str, jax.Array]
+
+
+def vlm_patch_count(seq_len: int) -> int:
+    return min(1024, max(seq_len // 4, 4))
+
+
+def batch_shapes(cfg: ModelConfig, batch: int, seq: int,
+                 ) -> Dict[str, Tuple[Tuple[int, ...], jnp.dtype]]:
+    """{name: (shape, dtype)} for a *training/prefill* batch."""
+    i32, dt = jnp.int32, jnp.dtype(cfg.dtype)
+    if cfg.family == ENCDEC:
+        return {
+            "frontend": ((batch, seq, cfg.frontend_embed_dim), dt),
+            "tokens": ((batch, seq), i32),
+            "targets": ((batch, seq), i32),
+            "positions": ((batch, seq), i32),
+        }
+    if cfg.family == VLM:
+        npat = vlm_patch_count(seq)
+        ntext = seq - npat
+        return {
+            "frontend": ((batch, npat, cfg.frontend_embed_dim), dt),
+            "tokens": ((batch, ntext), i32),
+            "targets": ((batch, ntext), i32),
+            "positions": ((3, batch, seq), i32),
+        }
+    return {
+        "tokens": ((batch, seq), i32),
+        "targets": ((batch, seq), i32),
+        "positions": ((batch, seq), i32),
+    }
+
+
+def make_batch(cfg: ModelConfig, batch: int, seq: int,
+               key: Optional[jax.Array] = None) -> Batch:
+    """Synthetic but deterministic batch with real arrays (smoke tests)."""
+    key = key if key is not None else jax.random.PRNGKey(0)
+    out: Batch = {}
+    for name, (shape, dtype) in batch_shapes(cfg, batch, seq).items():
+        key, sub = jax.random.split(key)
+        if name in ("tokens", "targets"):
+            out[name] = jax.random.randint(sub, shape, 0, cfg.vocab_size,
+                                           dtype=dtype)
+        elif name == "positions":
+            if cfg.family == VLM:
+                pos = jnp.broadcast_to(jnp.arange(seq, dtype=jnp.int32),
+                                       shape[1:])
+                out[name] = jnp.broadcast_to(pos[None], shape)
+            else:
+                out[name] = jnp.broadcast_to(
+                    jnp.arange(seq, dtype=jnp.int32)[None], shape)
+        else:  # frontend embeddings
+            out[name] = (jax.random.normal(sub, shape, jnp.float32)
+                         .astype(dtype))
+    return out
+
+
+def make_specs(cfg: ModelConfig, batch: int, seq: int) -> Batch:
+    """ShapeDtypeStruct stand-ins (no allocation) for lowering."""
+    return {name: jax.ShapeDtypeStruct(shape, dtype)
+            for name, (shape, dtype) in batch_shapes(cfg, batch, seq).items()}
+
+
+def decode_token_shapes(cfg: ModelConfig, batch: int,
+                        ) -> Tuple[Tuple[int, ...], jnp.dtype]:
+    return (batch, 1), jnp.int32
+
+
+def make_decode_tokens(cfg: ModelConfig, batch: int,
+                       key: Optional[jax.Array] = None) -> jax.Array:
+    key = key if key is not None else jax.random.PRNGKey(1)
+    shape, dtype = decode_token_shapes(cfg, batch)
+    return jax.random.randint(key, shape, 0, cfg.vocab_size, dtype=dtype)

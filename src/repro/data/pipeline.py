@@ -1,0 +1,155 @@
+"""Data pipeline: deterministic synthetic token shards served through XUFS.
+
+Shards live as objects in the home store (the "input data" of the paper's
+workflow §2.1, step 3); the pipeline reads them through the XufsClient so
+they are whole-object cached, prefetched in parallel, and survive home
+disconnects once cached — the trainer never stalls on the WAN.
+
+Determinism: shard contents are a pure function of (seed, shard_index), so
+an elastic re-shard or a restart resumes exactly.
+"""
+from __future__ import annotations
+
+import io
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.core.namespace import XufsClient
+from repro.data.batches import batch_shapes
+
+
+def synth_tokens(seed: int, shard: int, n: int, vocab: int) -> np.ndarray:
+    rng = np.random.default_rng(np.random.SeedSequence([seed, shard]))
+    return rng.integers(0, vocab, size=n, dtype=np.int32)
+
+
+@dataclass
+class ShardSpec:
+    index: int
+    path: str
+    tokens: int
+
+
+class SyntheticCorpus:
+    """Writes deterministic token shards into a home store via a client."""
+
+    def __init__(self, client: XufsClient, prefix: str, *, seed: int,
+                 vocab: int, shard_tokens: int = 262_144):
+        self.client = client
+        self.prefix = prefix.rstrip("/")
+        self.seed = seed
+        self.vocab = vocab
+        self.shard_tokens = shard_tokens
+
+    def shard_path(self, i: int) -> str:
+        return f"{self.prefix}/shard_{i:06d}.npy"
+
+    def materialize(self, n_shards: int) -> List[ShardSpec]:
+        specs = []
+        for i in range(n_shards):
+            toks = synth_tokens(self.seed, i, self.shard_tokens, self.vocab)
+            buf = io.BytesIO()
+            np.save(buf, toks, allow_pickle=False)
+            with self.client.open(self.shard_path(i), "w") as f:
+                f.write(buf.getvalue())
+            specs.append(ShardSpec(i, self.shard_path(i), self.shard_tokens))
+        self.client.sync()
+        return specs
+
+
+class DataPipeline:
+    """Iterates model batches from XUFS-cached shards with read-ahead."""
+
+    def __init__(self, client: XufsClient, prefix: str, cfg: ModelConfig, *,
+                 batch: int, seq: int, seed: int = 0, n_shards: int = 4,
+                 read_ahead: int = 1):
+        self.client = client
+        self.prefix = prefix.rstrip("/")
+        self.cfg = cfg
+        self.batch = batch
+        self.seq = seq
+        self.seed = seed
+        self.n_shards = n_shards
+        self.read_ahead = read_ahead
+        self._shard_cache: Dict[int, np.ndarray] = {}
+        self._cursor = 0          # global token cursor
+        self.stalls = 0
+
+    # ---- shard access ------------------------------------------------------
+    def _load_shard(self, i: int) -> np.ndarray:
+        i = i % self.n_shards
+        if i not in self._shard_cache:
+            path = f"{self.prefix}/shard_{i:06d}.npy"
+            with self.client.open(path) as f:
+                self._shard_cache[i] = np.load(io.BytesIO(f.read()),
+                                               allow_pickle=False)
+            # bounded cache: drop shards far behind the cursor
+            if len(self._shard_cache) > self.read_ahead + 2:
+                oldest = min(self._shard_cache)
+                if oldest != i:
+                    del self._shard_cache[oldest]
+        return self._shard_cache[i]
+
+    def _take(self, n: int) -> np.ndarray:
+        out = np.empty(n, np.int32)
+        got = 0
+        while got < n:
+            shard0 = self._load_shard(0)
+            st = len(shard0)
+            idx = self._cursor + got
+            si, off = divmod(idx, st)
+            shard = self._load_shard(si)
+            take = min(n - got, st - off)
+            out[got:got + take] = shard[off:off + take]
+            got += take
+        self._cursor += n
+        # read-ahead: warm the next shard through the cache
+        st = len(self._load_shard(0))
+        nxt = (self._cursor // st) + 1
+        self._load_shard(nxt)
+        return out
+
+    # ---- batches --------------------------------------------------------------
+    def next_batch(self) -> Dict[str, jax.Array]:
+        shapes = batch_shapes(self.cfg, self.batch, self.seq)
+        toks_shape = shapes["tokens"][0]
+        n = int(np.prod(toks_shape)) + 1
+        flat = self._take(n)
+        tokens = flat[:-1].reshape(toks_shape)
+        targets = np.concatenate([flat[1:]]).reshape(-1)[
+            : int(np.prod(shapes["targets"][0]))].reshape(
+            shapes["targets"][0])
+        out: Dict[str, jax.Array] = {
+            "tokens": jnp.asarray(tokens),
+            "targets": jnp.asarray(targets),
+        }
+        pshape, _ = shapes["positions"]
+        if len(pshape) == 3:   # VLM [3, B, S]
+            pos = np.broadcast_to(np.arange(pshape[-1], dtype=np.int32),
+                                  pshape[1:])
+            out["positions"] = jnp.asarray(np.broadcast_to(pos, pshape))
+        else:
+            out["positions"] = jnp.asarray(np.broadcast_to(
+                np.arange(pshape[-1], dtype=np.int32)[None], pshape))
+        if "frontend" in shapes:
+            fshape, fdtype = shapes["frontend"]
+            rng = np.random.default_rng(self._cursor)
+            out["frontend"] = jnp.asarray(
+                rng.standard_normal(fshape, dtype=np.float32)).astype(fdtype)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, jax.Array]]:
+        while True:
+            yield self.next_batch()
+
+    # ---- resumability ----------------------------------------------------------
+    def state(self) -> Dict:
+        return {"cursor": self._cursor}
+
+    def restore(self, state: Dict) -> None:
+        self._cursor = int(state["cursor"])

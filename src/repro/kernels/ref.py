@@ -1,0 +1,87 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+These are deliberately the *naive* formulations — full softmax attention,
+strictly sequential recurrences, per-group matmul loops — so kernel tests
+compare the optimized tilings against unambiguous semantics.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, q_offset: int = 0) -> jax.Array:
+    """q: [B,Hq,Sq,D]; k,v: [B,Hkv,Skv,D] -> [B,Hq,Sq,D] (float32 math)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qf = q.astype(jnp.float32) * (D ** -0.5)
+    qf = qf.reshape(B, Hkv, G, Sq, D)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qf, k.astype(jnp.float32))
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)
+        mask = qpos[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", w, v.astype(jnp.float32))
+    return o.reshape(B, Hq, Sq, D).astype(q.dtype)
+
+
+def rwkv6_ref(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
+              u: jax.Array) -> jax.Array:
+    """Sequential WKV6.  r,k,v,w: [B,H,S,D]; u: [H,D] -> [B,H,S,D] (f32)."""
+    B, H, S, D = r.shape
+
+    def step(state, xs):
+        r_t, k_t, v_t, w_t = xs                       # [B,H,D]
+        kv = k_t[..., :, None] * v_t[..., None, :]    # [B,H,Dk,Dv]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, state + u[..., None] * kv)
+        state = w_t[..., None] * state + kv
+        return state, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 2, 0)
+               for t in (r, k, v, w))
+    _, ys = jax.lax.scan(step, jnp.zeros((B, H, D, D), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 2)
+
+
+def mamba_ref(A: jax.Array, dt: jax.Array, b: jax.Array, c: jax.Array,
+              x: jax.Array) -> jax.Array:
+    """Sequential selective scan.
+
+    A: [di,N]; dt,x: [B,S,di]; b,c: [B,S,N] -> y [B,S,di] (float32).
+    """
+    B, S, di = x.shape
+    N = A.shape[1]
+
+    def step(h, xs):
+        dt_t, b_t, c_t, x_t = xs
+        dA = jnp.exp(dt_t[..., None] * A)
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    xs = tuple(jnp.moveaxis(t.astype(jnp.float32), 1, 0)
+               for t in (dt, b, c, x))
+    _, ys = jax.lax.scan(step, jnp.zeros((B, di, N), jnp.float32), xs)
+    return jnp.moveaxis(ys, 0, 1)
+
+
+def gmm_ref(lhs: jax.Array, rhs: jax.Array,
+            group_sizes: jax.Array) -> jax.Array:
+    """Grouped matmul.  lhs: [M,K] rows sorted by group; rhs: [G,K,N].
+
+    Row m belongs to group g iff offsets[g] <= m < offsets[g+1].
+    """
+    M = lhs.shape[0]
+    G = rhs.shape[0]
+    starts = jnp.concatenate([jnp.zeros((1,), group_sizes.dtype),
+                              jnp.cumsum(group_sizes)])[:-1]
+    row_group = jnp.sum(jnp.arange(M)[:, None]
+                        >= (starts + group_sizes)[None, :], axis=1)
+    row_group = jnp.clip(row_group, 0, G - 1)
+    picked = rhs[row_group]                       # [M, K, N]
+    return jnp.einsum("mk,mkn->mn", lhs.astype(jnp.float32),
+                      picked.astype(jnp.float32)).astype(lhs.dtype)

@@ -1,0 +1,316 @@
+"""Loop-aware analysis of post-SPMD compiled HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts each while-loop body ONCE, which
+undercounts scan-over-layers models by ~num_layers x.  This module parses
+the HLO module text, builds the computation call graph (fusions, calls,
+while bodies with their ``known_trip_count``), and accumulates per-device:
+
+  * ``flops``            — 2 * prod(result dims) * contraction size per dot
+                           (MXU work; elementwise VPU work excluded);
+  * ``traffic_bytes``    — Σ (result + operand bytes) over materializing
+                           ops, fusion-boundary semantics (fusion interiors
+                           stay in registers/VMEM);
+  * ``collective_bytes`` — operand bytes per collective opcode, resolved
+                           through the symbol table (operands print bare).
+
+Every quantity is multiplied by the product of enclosing loop trip counts.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "u1": 1,
+}
+
+COLLECTIVE_OPS = ("all-gather", "all-reduce", "reduce-scatter",
+                  "all-to-all", "collective-permute")
+
+# ops that do not materialize new traffic (metadata / aliasing / control)
+_NO_TRAFFIC = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "conditional", "call", "after-all", "add-dependency",
+    "get-dimension-size", "partition-id", "replica-id", "iota",
+}
+
+_COMP_HEADER = re.compile(r"^(?:ENTRY\s+)?(%?[\w\.\-]+)\s*\(.*\)\s*->.*{")
+_NAME = re.compile(r"^\s*(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*")
+_OPCODE = re.compile(r"^\s*([\w\-]+)\(")
+_SHAPE = re.compile(r"(\w+)\[([0-9,]*)\]")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|body|to_apply|condition)=(%[\w\.\-]+)")
+_CONTRACT = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_OPERANDS = re.compile(r"(%[\w\.\-]+)")
+
+
+def _shape_list(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for dt, dims in _SHAPE.findall(text):
+        if dt in _DTYPE_BYTES:
+            shape = tuple(int(d) for d in dims.split(",")) if dims else ()
+            out.append((dt, shape))
+    return out
+
+
+def _nbytes(shapes: List[Tuple[str, Tuple[int, ...]]]) -> int:
+    total = 0
+    for dt, shape in shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+class Instr:
+    __slots__ = ("name", "result_text", "opcode", "rest", "result_bytes",
+                 "result_shapes")
+
+    def __init__(self, name, result_text, opcode, rest):
+        self.name = name
+        self.result_text = result_text
+        self.opcode = opcode
+        self.rest = rest
+        self.result_shapes = _shape_list(result_text)
+        self.result_bytes = _nbytes(self.result_shapes)
+
+
+def _split_instr(line: str):
+    """'%x = TYPE opcode(rest' -> (name, type_text, opcode, rest) or None.
+
+    TYPE may be a tuple '(s32[], /*index=1*/f32[2]{0})' (parens + '='-laden
+    comments) or a plain 'f32[8,512]{1,0}' token, so we skip it structurally
+    rather than with a regex.
+    """
+    m = _NAME.match(line)
+    if m is None:
+        return None
+    pos = m.end()
+    n = len(line)
+    if pos < n and line[pos] == "(":
+        depth = 0
+        start = pos
+        while pos < n:
+            if line[pos] == "(":
+                depth += 1
+            elif line[pos] == ")":
+                depth -= 1
+                if depth == 0:
+                    pos += 1
+                    break
+            pos += 1
+        type_text = line[start:pos]
+    else:
+        start = pos
+        while pos < n and not line[pos].isspace():
+            pos += 1
+        type_text = line[start:pos]
+    mo = _OPCODE.match(line[pos:])
+    if mo is None:
+        return None
+    opcode = mo.group(1)
+    rest = line[pos + mo.end():]
+    return m.group(1), type_text, opcode, rest
+
+
+def parse_module(text: str) -> Tuple[Dict[str, List[Instr]], str]:
+    comps: Dict[str, List[Instr]] = {}
+    entry = ""
+    cur: Optional[str] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            m = _COMP_HEADER.match(line)
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.startswith("ENTRY"):
+                    entry = cur
+            continue
+        if s == "}":
+            cur = None
+            continue
+        parts = _split_instr(line)
+        if parts:
+            comps[cur].append(Instr(*parts))
+    return comps, entry
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, entry = parse_module(text)
+    # symbol table: per computation, name -> result bytes
+    sym: Dict[str, Dict[str, int]] = {
+        c: {i.name: i.result_bytes for i in instrs}
+        for c, instrs in comps.items()
+    }
+
+    # multipliers via DFS over the call graph; fusion bodies count flops
+    # but not traffic (their interiors stay in registers/VMEM)
+    mult: Dict[str, float] = defaultdict(float)
+    fusion_mult: Dict[str, float] = defaultdict(float)
+
+    def visit(comp: str, m: float, in_fusion: bool) -> None:
+        if in_fusion:
+            fusion_mult[comp] += m
+        else:
+            mult[comp] += m
+        for instr in comps.get(comp, ()):
+            trip = 1.0
+            if instr.opcode == "while":
+                t = _TRIP.search(instr.rest)
+                trip = float(t.group(1)) if t else 1.0
+            child_fusion = in_fusion or instr.opcode in (
+                "fusion", "reduce", "all-reduce", "reduce-scatter",
+                "scatter", "sort", "map", "reduce-window")
+            for callee in _CALLS.findall(instr.rest):
+                if callee in comps:
+                    visit(callee,
+                          m * (trip if instr.opcode == "while" else 1.0),
+                          child_fusion)
+
+    if entry:
+        visit(entry, 1.0, False)
+
+    flops = 0.0
+    traffic = 0.0
+    coll: Dict[str, float] = {c: 0.0 for c in COLLECTIVE_OPS}
+    coll_count = 0.0
+
+    _SLICING = ("dynamic-slice", "gather", "slice")
+    _fusion_cache: Dict[str, float] = {}
+
+    def fusion_traffic(callee: str, result_bytes: int) -> float:
+        """HBM traffic of one fusion execution: slice-aware param reads +
+        update-region-aware writes (interiors stay in registers)."""
+        if callee in _fusion_cache:
+            return _fusion_cache[callee] + 0.0  # reads are cacheable
+        instrs = comps.get(callee, [])
+        table = sym.get(callee, {})
+        consumers: Dict[str, List[Instr]] = defaultdict(list)
+        for ins in instrs:
+            head = ins.rest.split(")", 1)[0]
+            for o in _OPERANDS.findall(head):
+                consumers[o].append(ins)
+        reads = 0.0
+        for ins in instrs:
+            if ins.opcode != "parameter":
+                continue
+            cons = consumers.get(ins.name, [])
+            if cons and all(c.opcode in _SLICING for c in cons):
+                reads += sum(c.result_bytes for c in cons)
+            else:
+                reads += ins.result_bytes
+        _fusion_cache[callee] = reads
+        return reads
+
+    def fusion_write_bytes(callee: str, result_bytes: int) -> float:
+        instrs = comps.get(callee, [])
+        table = sym.get(callee, {})
+        root = instrs[-1] if instrs else None
+        if root is not None and root.opcode == "dynamic-update-slice":
+            head = root.rest.split(")", 1)[0]
+            opnds = _OPERANDS.findall(head)
+            if len(opnds) > 1:
+                return 2.0 * table.get(opnds[1], result_bytes)
+        return float(result_bytes)
+
+    for comp, instrs in comps.items():
+        m = mult.get(comp, 0.0)
+        m_total = m + fusion_mult.get(comp, 0.0)
+        if m_total == 0.0:
+            continue
+        table = sym[comp]
+        for instr in instrs:
+            op = instr.opcode
+            if op == "dot":
+                cm = _CONTRACT.search(instr.rest)
+                operands = _OPERANDS.findall(instr.rest)
+                lhs_bytes_shapes = None
+                contract = 1
+                if cm and operands:
+                    lhs = operands[0]
+                    # find lhs shape from its defining instr
+                    for cand in instrs:
+                        if cand.name == lhs and cand.result_shapes:
+                            dims = cand.result_shapes[0][1]
+                            idxs = [int(x) for x in cm.group(1).split(",")
+                                    if x != ""]
+                            for i in idxs:
+                                if i < len(dims):
+                                    contract *= dims[i]
+                            break
+                    else:
+                        contract = 0
+                n_out = 1
+                for _, shape in instr.result_shapes:
+                    for d in shape:
+                        n_out *= d
+                if contract:
+                    flops += m_total * 2.0 * n_out * contract
+                traffic += m * instr.result_bytes
+                traffic += m * sum(table.get(o, 0)
+                                   for o in _OPERANDS.findall(
+                                       instr.rest.split("),")[0]))
+                continue
+            if op in COLLECTIVE_OPS or any(
+                    op == c + sfx for c in COLLECTIVE_OPS
+                    for sfx in ("-start",)):
+                base = op.replace("-start", "")
+                head = instr.rest.split(")", 1)[0]
+                operand_names = _OPERANDS.findall(head)
+                nb = sum(table.get(o, 0) for o in operand_names)
+                if nb == 0:
+                    nb = instr.result_bytes
+                coll[base] += m * nb
+                coll_count += m
+                traffic += m * nb
+                continue
+            if op in _NO_TRAFFIC or op.endswith("-done"):
+                continue
+            head = instr.rest.split(")", 1)[0]
+            opnds = _OPERANDS.findall(head)
+            if op in ("dynamic-slice", "gather", "slice", "broadcast",
+                      "pad", "reverse"):
+                # reads/writes only the slice-sized result, not the operand
+                nb = 2 * instr.result_bytes
+            elif op == "dynamic-update-slice":
+                # in-place update: read+write of the update region only
+                upd = table.get(opnds[1], 0) if len(opnds) > 1 else 0
+                nb = 2 * upd
+            elif op == "scatter":
+                upd = table.get(opnds[2], 0) if len(opnds) > 2 else \
+                    instr.result_bytes
+                nb = 2 * upd
+            elif op == "fusion":
+                callee = None
+                cm2 = _CALLS.search(instr.rest)
+                if cm2:
+                    callee = cm2.group(1)
+                if callee and callee in comps:
+                    nb = (fusion_write_bytes(callee, instr.result_bytes)
+                          + fusion_traffic(callee, instr.result_bytes))
+                else:
+                    nb = instr.result_bytes + sum(table.get(o, 0)
+                                                  for o in opnds)
+            else:
+                # elementwise / copy / reduce / convert: result + operands
+                nb = instr.result_bytes + sum(table.get(o, 0)
+                                              for o in opnds)
+            traffic += m * nb
+
+    out: Dict[str, float] = {
+        "flops": flops,
+        "traffic_bytes": traffic,
+        "collective_total": sum(coll.values()),
+        "collective_count": coll_count,
+    }
+    for c in COLLECTIVE_OPS:
+        out[f"coll_{c}"] = coll[c]
+    return out

@@ -1,0 +1,4 @@
+from repro.models.model import (  # noqa: F401
+    init_params, param_axes, forward, loss_fn,
+    init_cache, cache_logical_axes, prefill, decode_step,
+)

@@ -1,0 +1,80 @@
+"""Decoder transformer block (dense MLP or MoE) shared by dense/moe/vlm."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import (
+    Params, Axes, rmsnorm_init, rmsnorm, mlp_init, mlp_axes, mlp_apply,
+)
+from repro.models.attention import (
+    attention_init, attention_axes, attention_apply, attention_prefill,
+    attention_decode,
+)
+from repro.models.moe import moe_init, moe_axes, moe_apply
+
+
+def block_init(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p: Params = {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "attn": attention_init(cfg, k1),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_init(cfg, k2)
+    else:
+        p["mlp"] = mlp_init(cfg, k2)
+    return p
+
+
+def block_axes(cfg: ModelConfig) -> Axes:
+    a: Axes = {"ln1": ("embed",), "attn": attention_axes(cfg),
+               "ln2": ("embed",)}
+    if cfg.is_moe:
+        a["moe"] = moe_axes(cfg)
+    else:
+        a["mlp"] = mlp_axes(cfg)
+    return a
+
+
+def _ffn(cfg: ModelConfig, p: Params, h: jax.Array,
+         ) -> Tuple[jax.Array, jax.Array]:
+    x = rmsnorm(h, p["ln2"], cfg.rms_eps)
+    if cfg.is_moe:
+        y, aux = moe_apply(cfg, p["moe"], x)
+    else:
+        y, aux = mlp_apply(cfg, p["mlp"], x), jnp.zeros((), jnp.float32)
+    return h + y, aux
+
+
+def block_apply(cfg: ModelConfig, p: Params, h: jax.Array,
+                positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Train/eval full-sequence forward.  h: [B,S,d] -> (h, aux_loss)."""
+    a = attention_apply(cfg, p["attn"], rmsnorm(h, p["ln1"], cfg.rms_eps),
+                        positions, causal=True)
+    return _ffn(cfg, p, h + a)
+
+
+def block_prefill(cfg: ModelConfig, p: Params, h: jax.Array,
+                  positions: jax.Array,
+                  ) -> Tuple[jax.Array, Dict[str, jax.Array], jax.Array]:
+    a, cache = attention_prefill(cfg, p["attn"],
+                                 rmsnorm(h, p["ln1"], cfg.rms_eps), positions)
+    h, aux = _ffn(cfg, p, h + a)
+    return h, cache, aux
+
+
+def block_decode(cfg: ModelConfig, p: Params, h: jax.Array,
+                 positions: jax.Array, cache_k: jax.Array,
+                 cache_v: jax.Array, index: jax.Array,
+                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    a, ck, cv = attention_decode(cfg, p["attn"],
+                                 rmsnorm(h, p["ln1"], cfg.rms_eps),
+                                 positions, cache_k, cache_v, index)
+    h, _ = _ffn(cfg, p, h + a)
+    return h, ck, cv

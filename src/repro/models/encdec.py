@@ -1,0 +1,138 @@
+"""Encoder-decoder backbone (SeamlessM4T-medium shape).
+
+Encoder: bidirectional self-attention blocks over stub frame embeddings.
+Decoder: causal self-attention + cross-attention to encoder states.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import (
+    Params, Axes, rmsnorm_init, rmsnorm, mlp_init, mlp_axes, mlp_apply,
+)
+from repro.models.attention import (
+    attention_init, attention_axes, attention_apply, attention_prefill,
+    attention_decode, _project_qkv, _attend,
+)
+
+
+# ---------------------------------------------------------------------------
+# encoder block (bidirectional)
+# ---------------------------------------------------------------------------
+
+def enc_block_init(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "attn": attention_init(cfg, k1),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+        "mlp": mlp_init(cfg, k2),
+    }
+
+
+def enc_block_axes(cfg: ModelConfig) -> Axes:
+    return {"ln1": ("embed",), "attn": attention_axes(cfg),
+            "ln2": ("embed",), "mlp": mlp_axes(cfg)}
+
+
+def enc_block_apply(cfg: ModelConfig, p: Params, h: jax.Array,
+                    positions: jax.Array) -> jax.Array:
+    a = attention_apply(cfg, p["attn"], rmsnorm(h, p["ln1"], cfg.rms_eps),
+                        positions, causal=False)
+    h = h + a
+    return h + mlp_apply(cfg, p["mlp"], rmsnorm(h, p["ln2"], cfg.rms_eps))
+
+
+# ---------------------------------------------------------------------------
+# decoder block (causal self-attn + cross-attn)
+# ---------------------------------------------------------------------------
+
+def dec_block_init(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model, dt),
+        "self_attn": attention_init(cfg, k1),
+        "ln_x": rmsnorm_init(cfg.d_model, dt),
+        "cross_attn": attention_init(cfg, k2, cross=True),
+        "ln2": rmsnorm_init(cfg.d_model, dt),
+        "mlp": mlp_init(cfg, k3),
+    }
+
+
+def dec_block_axes(cfg: ModelConfig) -> Axes:
+    return {
+        "ln1": ("embed",), "self_attn": attention_axes(cfg),
+        "ln_x": ("embed",), "cross_attn": attention_axes(cfg),
+        "ln2": ("embed",), "mlp": mlp_axes(cfg),
+    }
+
+
+def dec_block_apply(cfg: ModelConfig, p: Params, h: jax.Array,
+                    positions: jax.Array, enc_h: jax.Array,
+                    enc_positions: jax.Array) -> jax.Array:
+    a = attention_apply(cfg, p["self_attn"],
+                        rmsnorm(h, p["ln1"], cfg.rms_eps),
+                        positions, causal=True)
+    h = h + a
+    x = attention_apply(cfg, p["cross_attn"],
+                        rmsnorm(h, p["ln_x"], cfg.rms_eps),
+                        positions, causal=False, kv_x=enc_h,
+                        kv_positions=enc_positions)
+    h = h + x
+    return h + mlp_apply(cfg, p["mlp"], rmsnorm(h, p["ln2"], cfg.rms_eps))
+
+
+def dec_block_prefill(cfg: ModelConfig, p: Params, h: jax.Array,
+                      positions: jax.Array, enc_h: jax.Array,
+                      enc_positions: jax.Array,
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    a, self_kv = attention_prefill(cfg, p["self_attn"],
+                                   rmsnorm(h, p["ln1"], cfg.rms_eps),
+                                   positions)
+    h = h + a
+    # cross attention: cache encoder-side K/V so decode never re-projects
+    xn = rmsnorm(h, p["ln_x"], cfg.rms_eps)
+    q, ck, cv = _project_qkv(cfg, p["cross_attn"], xn, positions,
+                             kv_x=enc_h, kv_positions=enc_positions)
+    o = _attend(cfg, q, ck, cv, causal=False)
+    B, S = h.shape[:2]
+    o = o.reshape(B, S, cfg.q_dim)
+    dtc = jnp.dtype(cfg.dtype)
+    h = h + jnp.einsum("bsh,hd->bsd", o, p["cross_attn"]["wo"].astype(dtc))
+    h = h + mlp_apply(cfg, p["mlp"], rmsnorm(h, p["ln2"], cfg.rms_eps))
+    Senc = enc_h.shape[1]
+    cache = {
+        "k": self_kv["k"], "v": self_kv["v"],
+        "xk": ck.reshape(B, Senc, cfg.kv_dim),
+        "xv": cv.reshape(B, Senc, cfg.kv_dim),
+    }
+    return h, cache
+
+
+def dec_block_decode(cfg: ModelConfig, p: Params, h: jax.Array,
+                     positions: jax.Array, cache: Dict[str, jax.Array],
+                     index: jax.Array,
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    a, ck, cv = attention_decode(cfg, p["self_attn"],
+                                 rmsnorm(h, p["ln1"], cfg.rms_eps),
+                                 positions, cache["k"], cache["v"], index)
+    h = h + a
+    # cross attention against the cached encoder K/V (no causal mask)
+    dtc = jnp.dtype(cfg.dtype)
+    xn = rmsnorm(h, p["ln_x"], cfg.rms_eps)
+    B = h.shape[0]
+    Senc = cache["xk"].shape[1]
+    q, _, _ = _project_qkv(cfg, p["cross_attn"], xn, positions)
+    kk = cache["xk"].reshape(B, Senc, cfg.num_kv_heads, cfg.head_dim)
+    vv = cache["xv"].reshape(B, Senc, cfg.num_kv_heads, cfg.head_dim)
+    o = _attend(cfg, q, kk, vv, causal=False)
+    o = o.reshape(B, 1, cfg.q_dim)
+    h = h + jnp.einsum("bsh,hd->bsd", o, p["cross_attn"]["wo"].astype(dtc))
+    h = h + mlp_apply(cfg, p["mlp"], rmsnorm(h, p["ln2"], cfg.rms_eps))
+    return h, {"k": ck, "v": cv, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,193 @@
+"""Jamba-style hybrid superblock: period-P interleave of Mamba and attention.
+
+With period 8, attn_pos 4, MoE on odd positions the superblock is
+
+    pos 0: mamba + MLP        pos 4: attention + MLP
+    pos 1: mamba + MoE        pos 5: mamba + MoE
+    pos 2: mamba + MLP        pos 6: mamba + MLP
+    pos 3: mamba + MoE        pos 7: mamba + MoE
+
+The model scans over ``num_layers // period`` identical superblocks, so the
+HLO contains one superblock body (8 sublayers) regardless of depth.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import (
+    Params, Axes, rmsnorm_init, rmsnorm, mlp_init, mlp_axes, mlp_apply,
+)
+from repro.models.attention import (
+    attention_init, attention_axes, attention_prefill, attention_apply,
+    attention_decode,
+)
+from repro.models.moe import moe_init, moe_axes, moe_apply
+from repro.models.mamba import (
+    mamba_init, mamba_axes, mamba_apply, mamba_decode, mamba_cache_init,
+)
+
+
+def _positions(cfg: ModelConfig) -> List[Tuple[str, str]]:
+    """[(mixer, ffn)] for each position in one superblock."""
+    m = cfg.moe
+    out = []
+    for i in range(cfg.hybrid_period):
+        mixer = "attn" if i == cfg.hybrid_attn_pos else "mamba"
+        is_moe = (cfg.is_moe and m is not None
+                  and i % m.moe_every == m.moe_offset)
+        out.append((mixer, "moe" if is_moe else "mlp"))
+    return out
+
+
+def superblock_init(cfg: ModelConfig, key) -> Params:
+    dt = jnp.dtype(cfg.param_dtype)
+    pos = _positions(cfg)
+    n_mamba = sum(1 for m, _ in pos if m == "mamba")
+    n_moe = sum(1 for _, f in pos if f == "moe")
+    n_mlp = len(pos) - n_moe
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "attn": attention_init(cfg, ks[0]),
+        "mamba": jax.vmap(lambda k: mamba_init(cfg, k))(
+            jax.random.split(ks[1], n_mamba)),
+        "mlp": jax.vmap(lambda k: mlp_init(cfg, k))(
+            jax.random.split(ks[2], n_mlp)),
+        "ln_mix": jnp.ones((len(pos), cfg.d_model), dt),
+        "ln_ffn": jnp.ones((len(pos), cfg.d_model), dt),
+    }
+    if n_moe:
+        p["moe"] = jax.vmap(lambda k: moe_init(cfg, k))(
+            jax.random.split(ks[3], n_moe))
+    return p
+
+
+def superblock_axes(cfg: ModelConfig) -> Axes:
+    pos = _positions(cfg)
+    prep = lambda tree: jax.tree.map(
+        lambda ax: ("sublayer",) + ax, tree,
+        is_leaf=lambda x: isinstance(x, tuple))
+    a: Axes = {
+        "attn": attention_axes(cfg),
+        "mamba": prep(mamba_axes(cfg)),
+        "mlp": prep(mlp_axes(cfg)),
+        "ln_mix": (None, "embed"),
+        "ln_ffn": (None, "embed"),
+    }
+    if any(f == "moe" for _, f in pos):
+        a["moe"] = prep(moe_axes(cfg))
+    return a
+
+
+def _slice_tree(tree: Params, i: int) -> Params:
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+def superblock_apply(cfg: ModelConfig, p: Params, h: jax.Array,
+                     positions: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Train forward through one superblock."""
+    aux = jnp.zeros((), jnp.float32)
+    im, io, il = 0, 0, 0
+    for i, (mixer, ffn) in enumerate(_positions(cfg)):
+        x = rmsnorm(h, p["ln_mix"][i], cfg.rms_eps)
+        if mixer == "attn":
+            h = h + attention_apply(cfg, p["attn"], x, positions, causal=True)
+        else:
+            h = h + mamba_apply(cfg, _slice_tree(p["mamba"], im), x)
+            im += 1
+        x = rmsnorm(h, p["ln_ffn"][i], cfg.rms_eps)
+        if ffn == "moe":
+            y, a = moe_apply(cfg, _slice_tree(p["moe"], io), x)
+            io += 1
+            aux = aux + a
+        else:
+            y = mlp_apply(cfg, _slice_tree(p["mlp"], il), x)
+            il += 1
+        h = h + y
+    return h, aux
+
+
+def superblock_prefill(cfg: ModelConfig, p: Params, h: jax.Array,
+                       positions: jax.Array,
+                       ) -> Tuple[jax.Array, Dict[str, jax.Array], jax.Array]:
+    """Prefill: also emits the attention KV for this superblock's attn layer.
+
+    (Mamba layers re-derive their decode state from the last tokens via the
+    serving engine's state-capture prefill path; see serve/engine.py.)
+    """
+    aux = jnp.zeros((), jnp.float32)
+    cache: Dict[str, jax.Array] = {}
+    im, io, il = 0, 0, 0
+    for i, (mixer, ffn) in enumerate(_positions(cfg)):
+        x = rmsnorm(h, p["ln_mix"][i], cfg.rms_eps)
+        if mixer == "attn":
+            a, kv = attention_prefill(cfg, p["attn"], x, positions)
+            h = h + a
+            cache["k"], cache["v"] = kv["k"], kv["v"]
+        else:
+            y, st = mamba_apply(cfg, _slice_tree(p["mamba"], im), x,
+                                return_state=True)
+            h = h + y
+            cache.setdefault("conv", []).append(st["conv"])
+            cache.setdefault("ssm", []).append(st["ssm"])
+            im += 1
+        x = rmsnorm(h, p["ln_ffn"][i], cfg.rms_eps)
+        if ffn == "moe":
+            y, a = moe_apply(cfg, _slice_tree(p["moe"], io), x)
+            io += 1
+            aux = aux + a
+        else:
+            y = mlp_apply(cfg, _slice_tree(p["mlp"], il), x)
+            il += 1
+        h = h + y
+    cache["conv"] = jnp.stack(cache["conv"])
+    cache["ssm"] = jnp.stack(cache["ssm"])
+    return h, cache, aux
+
+
+def superblock_decode(cfg: ModelConfig, p: Params, h: jax.Array,
+                      positions: jax.Array, cache: Dict[str, jax.Array],
+                      index: jax.Array,
+                      ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    new_cache = dict(cache)
+    im, io, il = 0, 0, 0
+    for i, (mixer, ffn) in enumerate(_positions(cfg)):
+        x = rmsnorm(h, p["ln_mix"][i], cfg.rms_eps)
+        if mixer == "attn":
+            a, ck, cv = attention_decode(cfg, p["attn"], x, positions,
+                                         cache["k"], cache["v"], index)
+            h = h + a
+            new_cache["k"], new_cache["v"] = ck, cv
+        else:
+            st = {"conv": cache["conv"][im], "ssm": cache["ssm"][im]}
+            y, st = mamba_decode(cfg, _slice_tree(p["mamba"], im), x, st)
+            h = h + y
+            new_cache["conv"] = new_cache["conv"].at[im].set(st["conv"])
+            new_cache["ssm"] = new_cache["ssm"].at[im].set(st["ssm"])
+            im += 1
+        x = rmsnorm(h, p["ln_ffn"][i], cfg.rms_eps)
+        if ffn == "moe":
+            y, _ = moe_apply(cfg, _slice_tree(p["moe"], io), x)
+            io += 1
+        else:
+            y = mlp_apply(cfg, _slice_tree(p["mlp"], il), x)
+            il += 1
+        h = h + y
+    return h, new_cache
+
+
+def hybrid_cache_init(cfg: ModelConfig, batch: int, max_len: int,
+                      ) -> Dict[str, jax.Array]:
+    nb = cfg.num_layers // cfg.hybrid_period
+    n_mamba = sum(1 for m, _ in _positions(cfg) if m == "mamba")
+    one = mamba_cache_init(cfg, batch)
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((nb, batch, max_len, cfg.kv_dim), dt),
+        "v": jnp.zeros((nb, batch, max_len, cfg.kv_dim), dt),
+        "conv": jnp.zeros((nb, n_mamba) + one["conv"].shape, dt),
+        "ssm": jnp.zeros((nb, n_mamba) + one["ssm"].shape, jnp.float32),
+    }

@@ -1,0 +1,195 @@
+"""Mamba-1 selective SSM block (Jamba configuration, d_state=16).
+
+XLA path: chunked sequential scan — the sequence is processed in chunks of
+``CHUNK`` tokens by an outer ``lax.scan`` whose body is rematerialized, so
+backward memory is bounded by chunk boundaries (the XLA-level analogue of
+the Pallas chunked kernel in kernels/mamba_scan.py).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import Params, Axes, dense_init, rmsnorm_init, rmsnorm
+
+CHUNK = 256
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int, int, int]:
+    m = cfg.mamba
+    assert m is not None
+    di = m.expand * cfg.d_model
+    return di, m.d_state, m.d_conv, m.resolved_dt_rank(cfg.d_model)
+
+
+def mamba_init(cfg: ModelConfig, key) -> Params:
+    m = cfg.mamba
+    dt = jnp.dtype(cfg.param_dtype)
+    di, N, K, R = _dims(cfg)
+    ks = jax.random.split(key, 6)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, N + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (cfg.d_model, 2 * di), dt),
+        "conv_w": dense_init(ks[1], (K, di), dt),
+        "conv_b": jnp.zeros((di,), dt),
+        "x_proj": dense_init(ks[2], (di, R + 2 * N), dt),
+        "dt_proj": dense_init(ks[3], (R, di), dt),
+        "dt_bias": jnp.log(jnp.expm1(  # softplus^-1 of uniform [1e-3, 1e-1]
+            10 ** (jax.random.uniform(ks[4], (di,)) * 2.0 - 3.0))).astype(dt),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[5], (di, cfg.d_model), dt),
+        "dt_norm": rmsnorm_init(R, dt),
+        "b_norm": rmsnorm_init(N, dt),
+        "c_norm": rmsnorm_init(N, dt),
+    }
+
+
+def mamba_axes(cfg: ModelConfig) -> Axes:
+    return {
+        "in_proj": ("embed", "inner"),
+        "conv_w": (None, "inner"),
+        "conv_b": ("inner",),
+        "x_proj": ("inner", None),
+        "dt_proj": (None, "inner"),
+        "dt_bias": ("inner",),
+        "A_log": ("inner", None),
+        "D": ("inner",),
+        "out_proj": ("inner", "embed"),
+        "dt_norm": (None,),
+        "b_norm": (None,),
+        "c_norm": (None,),
+    }
+
+
+def _ssm_inputs(cfg: ModelConfig, p: Params, xc: jax.Array):
+    """Post-conv activations -> (dt [.,di], B [.,N], C [.,N]) float32."""
+    m = cfg.mamba
+    di, N, K, R = _dims(cfg)
+    dbc = jnp.einsum("...d,dr->...r", xc, p["x_proj"].astype(xc.dtype))
+    dt_r, b, c = jnp.split(dbc, [R, R + N], axis=-1)
+    dt_r = rmsnorm(dt_r, p["dt_norm"], cfg.rms_eps)
+    b = rmsnorm(b, p["b_norm"], cfg.rms_eps).astype(jnp.float32)
+    c = rmsnorm(c, p["c_norm"], cfg.rms_eps).astype(jnp.float32)
+    dt = jnp.einsum("...r,rd->...d", dt_r, p["dt_proj"].astype(dt_r.dtype))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    return dt, b, c
+
+
+def _scan_chunk(A, dt, b, c, xs, h0):
+    """Sequential selective scan over one chunk.
+
+    A [di,N]; dt [B,C,di]; b,c [B,C,N]; xs [B,C,di]; h0 [B,di,N] -> (y, hT)
+    """
+    def step(h, inp):
+        dt_t, b_t, c_t, x_t = inp          # [B,di], [B,N], [B,N], [B,di]
+        dA = jnp.exp(dt_t[..., None] * A)  # [B,di,N]
+        dBx = (dt_t * x_t)[..., None] * b_t[:, None, :]
+        h = dA * h + dBx
+        y = jnp.einsum("bdn,bn->bd", h, c_t)
+        return h, y
+
+    inps = (jnp.moveaxis(dt, 1, 0), jnp.moveaxis(b, 1, 0),
+            jnp.moveaxis(c, 1, 0), jnp.moveaxis(xs, 1, 0))
+    hT, ys = jax.lax.scan(step, h0, inps)
+    return jnp.moveaxis(ys, 0, 1), hT
+
+
+def mamba_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+                return_state: bool = False):
+    """Full-sequence forward.  x: [B,S,d] -> [B,S,d] (+ final decode state)."""
+    use_kernel = cfg.scan_impl == "pallas" and not return_state
+    return _mamba_apply_impl(cfg, p, x, use_kernel=use_kernel,
+                             return_state=return_state)
+
+
+def _mamba_apply_impl(cfg: ModelConfig, p: Params, x: jax.Array,
+                      use_kernel: bool, return_state: bool = False):
+    dt_ = jnp.dtype(cfg.dtype)
+    di, N, K, R = _dims(cfg)
+    B, S, _ = x.shape
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xi, z = jnp.split(xz, 2, axis=-1)
+    # causal depthwise conv over seq
+    xpad = jnp.pad(xi, ((0, 0), (K - 1, 0), (0, 0)))
+    xc = sum(xpad[:, i:i + S, :] * p["conv_w"][i].astype(dt_)
+             for i in range(K))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt_))
+    dt, b, c = _ssm_inputs(cfg, p, xc)
+    A = -jnp.exp(p["A_log"])                        # [di, N]
+    xf = xc.astype(jnp.float32)
+
+    hT = None
+    if use_kernel:
+        from repro.kernels import ops as kops
+        y = kops.mamba_scan(A, dt, b, c, xf)
+    else:
+        nc = max(S // CHUNK, 1)
+        cs = S // nc
+        assert S % nc == 0
+
+        def chunk_body(h0, xs_chunk):
+            dt_c, b_c, c_c, x_c = xs_chunk
+            y, hT = _scan_chunk(A, dt_c, b_c, c_c, x_c, h0)
+            return hT, y
+
+        chunk_body = jax.checkpoint(chunk_body)
+        resh = lambda t, w: jnp.moveaxis(
+            t.reshape(B, nc, cs, w), 1, 0)
+        xs = (resh(dt, di), resh(b, N), resh(c, N), resh(xf, di))
+        h0 = jnp.zeros((B, di, N), jnp.float32)
+        hT, ys = jax.lax.scan(chunk_body, h0, xs)
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)
+
+    y = y + xf * p["D"]
+    out = (y.astype(dt_) * jax.nn.silu(z))
+    out = jnp.einsum("bsi,id->bsd", out, p["out_proj"].astype(dt_))
+    if return_state:
+        assert hT is not None, "return_state requires the XLA scan path"
+        conv_tail = xi[:, S - (K - 1):, :] if S >= K - 1 else jnp.pad(
+            xi, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        return out, {"conv": conv_tail, "ssm": hT}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# decode (single token, carried state)
+# ---------------------------------------------------------------------------
+
+def mamba_cache_init(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    di, N, K, _ = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, K - 1, di), jnp.dtype(cfg.dtype)),
+        "ssm": jnp.zeros((batch, di, N), jnp.float32),
+    }
+
+
+def mamba_decode(cfg: ModelConfig, p: Params, x: jax.Array,
+                 cache: Dict[str, jax.Array],
+                 ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """x: [B,1,d] -> ([B,1,d], new cache)."""
+    dt_ = jnp.dtype(cfg.dtype)
+    di, N, K, R = _dims(cfg)
+    B = x.shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dt_))
+    xi, z = jnp.split(xz, 2, axis=-1)              # [B,1,di]
+    window = jnp.concatenate([cache["conv"], xi], axis=1)   # [B,K,di]
+    # same left-to-right bf16 accumulation order as the full-sequence conv
+    xc = sum(window[:, i, :] * p["conv_w"][i].astype(dt_) for i in range(K))
+    xc = jax.nn.silu(xc + p["conv_b"].astype(dt_))[:, None, :]
+    dt, b, c = _ssm_inputs(cfg, p, xc)             # [B,1,*]
+    A = -jnp.exp(p["A_log"])
+    dA = jnp.exp(dt[:, 0, :, None] * A)            # [B,di,N]
+    dBx = (dt[:, 0] * xc[:, 0].astype(jnp.float32))[..., None] \
+        * b[:, 0][:, None, :]
+    h = dA * cache["ssm"] + dBx
+    y = jnp.einsum("bdn,bn->bd", h, c[:, 0])
+    y = y + xc[:, 0].astype(jnp.float32) * p["D"]
+    out = (y[:, None, :].astype(dt_) * jax.nn.silu(z))
+    out = jnp.einsum("bsi,id->bsd", out, p["out_proj"].astype(dt_))
+    return out, {"conv": window[:, 1:, :], "ssm": h}

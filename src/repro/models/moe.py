@@ -1,0 +1,141 @@
+"""Mixture-of-Experts layer: top-k router + capacity-bounded scatter dispatch.
+
+Dispatch strategy (XLA path): tokens are scattered into a fixed-capacity
+[E, C, d] buffer and gathered back after the per-expert SwiGLU.  This is
+O(T*k*d) in time and memory — the classic one-hot-einsum dispatch is
+O(T*E*C) and does NOT scale to the 1M-token train_4k cells (it would
+materialize a [1M, 128, 82k] mask).  Expert weights are stacked [E, ...]
+and sharded on the "experts" logical axis (EP on the model mesh axis).
+
+The TPU fast path is kernels/gmm.py (sort-based grouped matmul) behind
+``scan_impl="pallas"``; the scatter path is what the dry-run lowers.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import Params, Axes, dense_init
+from repro.parallel.context import shard
+
+AUX_LOSS_COEF = 0.01
+
+
+def moe_init(cfg: ModelConfig, key) -> Params:
+    m = cfg.moe
+    assert m is not None
+    dt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    E, d, f = m.num_experts, cfg.d_model, m.d_ff_expert
+    p: Params = {
+        "router": dense_init(ks[0], (d, E), jnp.float32),
+        "wi_gate": dense_init(ks[1], (E, d, f), dt, in_axis=1),
+        "wi_up": dense_init(ks[2], (E, d, f), dt, in_axis=1),
+        "wo": dense_init(ks[3], (E, f, d), dt, in_axis=1),
+    }
+    return p
+
+
+def moe_axes(cfg: ModelConfig) -> Axes:
+    return {
+        "router": ("embed", None),
+        "wi_gate": ("experts", "embed", "expert_mlp"),
+        "wi_up": ("experts", "embed", "expert_mlp"),
+        "wo": ("experts", "expert_mlp", "embed"),
+    }
+
+
+def _capacity(m, num_tokens: int) -> int:
+    c = int(m.capacity_factor * num_tokens * m.experts_per_token
+            / m.num_experts)
+    return max(c, m.experts_per_token)
+
+
+def moe_apply(cfg: ModelConfig, p: Params, x: jax.Array,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B,S,d] -> (out [B,S,d], aux_loss scalar).
+
+    Batches beyond ``moe.chunk_tokens`` are processed in token chunks via
+    lax.scan: the [E, C, d] dispatch working set stays fixed no matter how
+    long the prefill is (32k x 32 = 1M tokens would otherwise materialize
+    a ~64 GB dispatch buffer — EXPERIMENTS.md §Perf iteration 2).
+    """
+    m = cfg.moe
+    assert m is not None
+    B, S, d = x.shape
+    T = B * S
+    Tc = m.chunk_tokens
+    xf = x.reshape(T, d)
+    if Tc and T > Tc and T % Tc == 0:
+        nc = T // Tc
+
+        def body(aux, xc):
+            yc, a = _moe_tokens(cfg, p, xc)
+            return aux + a, yc
+
+        aux, ys = jax.lax.scan(body, jnp.zeros((), jnp.float32),
+                               xf.reshape(nc, Tc, d))
+        return ys.reshape(B, S, d), aux / nc
+    out, aux = _moe_tokens(cfg, p, xf)
+    return out.reshape(B, S, d), aux
+
+
+def _moe_tokens(cfg: ModelConfig, p: Params, xf: jax.Array,
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Route + dispatch + expert FFN + combine for a flat [T, d] slab."""
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    T, d = xf.shape
+    E, k = m.num_experts, m.experts_per_token
+    C = _capacity(m, T)
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32),
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                    # [T, E]
+    gate_w, ids = jax.lax.top_k(probs, k)                      # [T, k]
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)  # renormalize
+
+    # ---- load-balancing auxiliary loss (Switch-style) ------------------
+    me = jnp.mean(probs, axis=0)                               # [E]
+    onehot_topk = jax.nn.one_hot(ids, E, dtype=jnp.float32)    # [T, k, E]
+    ce = jnp.mean(jnp.sum(onehot_topk, axis=1), axis=0)        # frac routed
+    aux = AUX_LOSS_COEF * E * jnp.sum(me * ce) / k
+
+    # ---- position-in-expert via cumsum over the flattened assignments --
+    ids_flat = ids.reshape(T * k)                              # token-major
+    oh = jax.nn.one_hot(ids_flat, E, dtype=jnp.int32)          # [T*k, E]
+    pos_flat = (jnp.cumsum(oh, axis=0) - 1)[jnp.arange(T * k), ids_flat]
+    keep = pos_flat < C                                        # drop overflow
+    pos_flat = jnp.where(keep, pos_flat, C)                    # park drops
+
+    # ---- dispatch: scatter tokens into [E, C+1, d] (slot C = dropped) --
+    # NOTE: we deliberately do NOT with_sharding_constraint the dispatch
+    # buffers.  Forcing xe/ye onto the experts axis made GSPMD replicate
+    # the expert einsums (useful-flops ratio 0.60 -> 0.07 on dbrx-132b);
+    # left alone it emits an all-to-all EP dispatch.  Recorded as a
+    # REFUTED hypothesis in EXPERIMENTS.md §Perf iteration 2.
+    upd = jnp.repeat(xf.astype(dt), k, axis=0)                 # [T*k, d]
+    xe = jnp.zeros((E, C + 1, d), dt)
+    xe = xe.at[ids_flat, pos_flat].add(upd, mode="drop")
+
+    # ---- per-expert SwiGLU ---------------------------------------------
+    gate = jnp.einsum("ecd,edf->ecf", xe, p["wi_gate"].astype(dt))
+    up = jnp.einsum("ecd,edf->ecf", xe, p["wi_up"].astype(dt))
+    ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(gate) * up,
+                    p["wo"].astype(dt))
+
+    # ---- combine: gather back + weighted sum over k ---------------------
+    back = ye[ids_flat, pos_flat]                              # [T*k, d]
+    back = back * (keep[:, None] * gate_w.reshape(T * k)[:, None]).astype(dt)
+    out = jnp.sum(back.reshape(T, k, d), axis=1)
+    return out, aux
+
+
+def moe_flops(cfg: ModelConfig, num_tokens: int) -> int:
+    """Forward matmul FLOPs of one MoE layer (for roofline accounting)."""
+    m = cfg.moe
+    assert m is not None
+    per_tok = 2 * 3 * cfg.d_model * m.d_ff_expert * m.experts_per_token
+    return num_tokens * (per_tok + 2 * cfg.d_model * m.num_experts)

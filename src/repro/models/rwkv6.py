@@ -1,0 +1,275 @@
+"""RWKV6 (Finch) block: time-mixing with data-dependent decay + channel-mix.
+
+Recurrence per head (Dk = Dv = head_dim):
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: [Dk, Dv])
+    y_t = r_t (S_{t-1} + diag(u) k_t^T v_t)
+
+XLA path: chunked sequential scan (remat per chunk).  TPU fast path:
+kernels/rwkv6_scan.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import ModelConfig
+from repro.models.layers import (
+    Params, Axes, dense_init, rmsnorm_init, rmsnorm,
+)
+
+CHUNK = 64   # chunked-parallel form materializes [B,C,C,H,D] per chunk
+_MIX_COMPONENTS = 5  # w, k, v, r, g
+
+
+def _dims(cfg: ModelConfig) -> Tuple[int, int]:
+    c = cfg.rwkv
+    assert c is not None
+    H = cfg.d_model // c.head_dim
+    return H, c.head_dim
+
+
+def rwkv_init(cfg: ModelConfig, key) -> Params:
+    c = cfg.rwkv
+    dt = jnp.dtype(cfg.param_dtype)
+    d = cfg.d_model
+    ks = jax.random.split(key, 12)
+    return {
+        "ln1": rmsnorm_init(d, dt),
+        "ln2": rmsnorm_init(d, dt),
+        # --- time mixing ------------------------------------------------
+        "mu_base": jax.random.uniform(ks[0], (d,), dt, 0.0, 1.0),
+        "mu": jax.random.uniform(ks[1], (_MIX_COMPONENTS, d), dt, 0.0, 1.0),
+        "mix_w1": dense_init(ks[2], (d, _MIX_COMPONENTS * c.mix_lora), dt),
+        "mix_w2": dense_init(ks[3], (_MIX_COMPONENTS, c.mix_lora, d), dt,
+                             in_axis=1),
+        "decay_base": (jax.random.uniform(ks[4], (d,), jnp.float32)
+                       * 2.0 - 6.0),
+        "decay_w1": dense_init(ks[5], (d, c.decay_lora), dt),
+        "decay_w2": dense_init(ks[6], (c.decay_lora, d), dt),
+        "u": jax.random.uniform(ks[7], (d,), jnp.float32, -1.0, 1.0),
+        "wr": dense_init(ks[8], (d, d), dt),
+        "wk": dense_init(ks[9], (d, d), dt),
+        "wv": dense_init(ks[10], (d, d), dt),
+        "wg": dense_init(ks[11], (d, d), dt),
+        "wo": dense_init(jax.random.fold_in(key, 101), (d, d), dt),
+        "ln_x": rmsnorm_init(d, dt),
+        # --- channel mixing ----------------------------------------------
+        "cmu_k": jax.random.uniform(jax.random.fold_in(key, 102), (d,), dt),
+        "cmu_r": jax.random.uniform(jax.random.fold_in(key, 103), (d,), dt),
+        "cw_k": dense_init(jax.random.fold_in(key, 104), (d, cfg.d_ff), dt),
+        "cw_v": dense_init(jax.random.fold_in(key, 105), (cfg.d_ff, d), dt),
+        "cw_r": dense_init(jax.random.fold_in(key, 106), (d, d), dt),
+    }
+
+
+def rwkv_axes(cfg: ModelConfig) -> Axes:
+    return {
+        "ln1": ("embed",), "ln2": ("embed",),
+        "mu_base": ("embed",), "mu": (None, "embed"),
+        "mix_w1": ("embed", None), "mix_w2": (None, None, "embed"),
+        "decay_base": ("embed",),
+        "decay_w1": ("embed", None), "decay_w2": (None, "embed"),
+        "u": ("embed",),
+        "wr": ("embed", "heads"), "wk": ("embed", "heads"),
+        "wv": ("embed", "heads"), "wg": ("embed", "heads"),
+        "wo": ("heads", "embed"),
+        "ln_x": ("embed",),
+        "cmu_k": ("embed",), "cmu_r": ("embed",),
+        "cw_k": ("embed", "mlp"), "cw_v": ("mlp", "embed"),
+        "cw_r": ("embed", "embed2"),
+    }
+
+
+# ---------------------------------------------------------------------------
+# time mixing
+# ---------------------------------------------------------------------------
+
+def _ddlerp(cfg: ModelConfig, p: Params, x: jax.Array, x_prev: jax.Array):
+    """Data-dependent token-shift lerp -> (mw, mk, mv, mr, mg)."""
+    c = cfg.rwkv
+    sx = x_prev - x
+    base = x + sx * p["mu_base"].astype(x.dtype)
+    lo = jnp.tanh(jnp.einsum("...d,dr->...r", base,
+                             p["mix_w1"].astype(x.dtype)))
+    lo = lo.reshape(*lo.shape[:-1], _MIX_COMPONENTS, c.mix_lora)
+    off = jnp.einsum("...cr,crd->...cd", lo, p["mix_w2"].astype(x.dtype))
+    mus = p["mu"].astype(x.dtype) + off            # [..., 5, d]
+    mixed = x[..., None, :] + sx[..., None, :] * mus
+    return tuple(mixed[..., i, :] for i in range(_MIX_COMPONENTS))
+
+
+def _decay(cfg: ModelConfig, p: Params, mw: jax.Array) -> jax.Array:
+    """Per-channel decay w_t in (0,1): exp(-exp(base + lora(mw)))."""
+    lo = jnp.tanh(jnp.einsum("...d,dr->...r", mw,
+                             p["decay_w1"].astype(mw.dtype)))
+    dd = jnp.einsum("...r,rd->...d", lo, p["decay_w2"].astype(mw.dtype))
+    return jnp.exp(-jnp.exp(p["decay_base"] + dd.astype(jnp.float32)))
+
+
+def _wkv_chunk(r, k, v, w, u, S0):
+    """Sequential WKV over one chunk (reference form).
+
+    r,k,v: [B,C,H,D]; w: [B,C,H,D] decay; u: [H,D]; S0: [B,H,D,D]
+    returns (y [B,C,H,D], S_T)
+    """
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp                       # [B,H,D]
+        kv = k_t[..., :, None] * v_t[..., None, :]     # [B,H,Dk,Dv]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t, S + u[..., None] * kv)
+        S = w_t[..., None] * S + kv
+        return S, y
+
+    inps = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    ST, ys = jax.lax.scan(step, S0, inps)
+    return jnp.moveaxis(ys, 0, 1), ST
+
+
+def _wkv_chunk_parallel(r, k, v, w, u, S0):
+    """Chunked-matmul WKV (the Pallas kernel's math in jnp, DESIGN.md §8).
+
+    Replaces the per-token scan: the sequential form round-trips the
+    [B,H,D,D] state through HBM every token (the dominant memory term of
+    the rwkv6 train cell — EXPERIMENTS.md §Perf iteration 3); this form
+    touches the state once per chunk and turns the recurrence into MXU
+    matmuls.  All exponentials have non-positive arguments.
+    """
+    logw = jnp.log(jnp.maximum(w, 1e-37))              # [B,C,H,D]
+    L = jnp.cumsum(logw, axis=1)
+    L_prev = L - logw
+    C = r.shape[1]
+
+    # inter-chunk: r decayed to chunk start, applied to carried state
+    y = jnp.einsum("bthk,bhkv->bthv", r * jnp.exp(L_prev), S0)
+
+    # intra-chunk: A[t,s] = sum_d r_t k_s e^{L_prev[t]-L[s]}  (s < t)
+    expo = L_prev[:, :, None] - L[:, None, :]          # [B,C,C,H,D]
+    tri = (jnp.arange(C)[:, None] > jnp.arange(C)[None, :])
+    gated = jnp.where(tri[None, :, :, None, None], jnp.exp(expo), 0.0)
+    A = jnp.einsum("bthd,bshd,btshd->btsh", r, k, gated)
+    diag = jnp.einsum("bthd,hd,bthd->bth", r, u, k)    # bonus term
+    A = A + diag[:, :, None, :] * jnp.eye(C)[None, :, :, None]
+    y = y + jnp.einsum("btsh,bshv->bthv", A, v)
+
+    # state update: S' = diag(e^{L_C}) S0 + sum_s (k_s e^{L_C-L_s})^T v_s
+    L_total = L[:, -1:]                                # [B,1,H,D]
+    k_dec = k * jnp.exp(L_total - L)
+    ST = (jnp.exp(L_total[:, 0])[..., None] * S0
+          + jnp.einsum("bshk,bshv->bhkv", k_dec, v))
+    return y, ST
+
+
+def rwkv_time_mix(cfg: ModelConfig, p: Params, x: jax.Array,
+                  x_prev: jax.Array, return_state: bool = False):
+    """Full-sequence time mixing.  x: [B,S,d]; x_prev: x shifted right."""
+    H, D = _dims(cfg)
+    B, S, d = x.shape
+    mw, mk, mv, mr, mg = _ddlerp(cfg, p, x, x_prev)
+    dt = x.dtype
+    r = jnp.einsum("bsd,dh->bsh", mr, p["wr"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", mk, p["wk"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", mv, p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bsd,dh->bsh", mg, p["wg"].astype(dt)))
+    w = _decay(cfg, p, mw)                         # [B,S,d] float32
+
+    rs = r.reshape(B, S, H, D).astype(jnp.float32)
+    ks = k.reshape(B, S, H, D).astype(jnp.float32)
+    vs = v.reshape(B, S, H, D).astype(jnp.float32)
+    ws = w.reshape(B, S, H, D)
+    u = p["u"].reshape(H, D)
+
+    ST = None
+    if cfg.scan_impl == "pallas" and not return_state:
+        from repro.kernels import ops as kops
+        y = kops.rwkv6_scan(rs, ks, vs, ws, u)
+    else:
+        nc = max(S // CHUNK, 1)
+        cs = S // nc
+        assert S % nc == 0
+        chunk_fn = (_wkv_chunk if cfg.scan_impl == "xla_seq"
+                    else _wkv_chunk_parallel)
+
+        def chunk_body(S0, xs):
+            rc, kc, vc, wc = xs
+            y, ST = chunk_fn(rc, kc, vc, wc, u, S0)
+            return ST, y
+
+        chunk_body = jax.checkpoint(chunk_body)
+        resh = lambda t: jnp.moveaxis(t.reshape(B, nc, cs, H, D), 1, 0)
+        S0 = jnp.zeros((B, H, D, D), jnp.float32)
+        ST, ys = jax.lax.scan(chunk_body, S0,
+                              (resh(rs), resh(ks), resh(vs), resh(ws)))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, D)
+
+    y = y.reshape(B, S, d).astype(dt)
+    y = rmsnorm(y, p["ln_x"], cfg.rms_eps) * g
+    out = jnp.einsum("bsh,hd->bsd", y, p["wo"].astype(dt))
+    if return_state:
+        return out, ST
+    return out
+
+
+def rwkv_channel_mix(cfg: ModelConfig, p: Params, x: jax.Array,
+                     x_prev: jax.Array) -> jax.Array:
+    dt = x.dtype
+    sx = x_prev - x
+    xk = x + sx * p["cmu_k"].astype(dt)
+    xr = x + sx * p["cmu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(
+        jnp.einsum("bsd,df->bsf", xk, p["cw_k"].astype(dt))))
+    kv = jnp.einsum("bsf,fd->bsd", kk, p["cw_v"].astype(dt))
+    return jax.nn.sigmoid(
+        jnp.einsum("bsd,de->bse", xr, p["cw_r"].astype(dt))) * kv
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+def rwkv_cache_init(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    H, D = _dims(cfg)
+    d, dt = cfg.d_model, jnp.dtype(cfg.dtype)
+    return {
+        "tshift": jnp.zeros((batch, d), dt),
+        "cshift": jnp.zeros((batch, d), dt),
+        "wkv": jnp.zeros((batch, H, D, D), jnp.float32),
+    }
+
+
+def rwkv_decode_time(cfg: ModelConfig, p: Params, x: jax.Array,
+                     cache: Dict[str, jax.Array],
+                     ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """One-token time-mix step.  x: [B,1,d] (post-ln1 input)."""
+    H, D = _dims(cfg)
+    B, _, d = x.shape
+    xt = x[:, 0, :]
+    mw, mk, mv, mr, mg = _ddlerp(cfg, p, xt, cache["tshift"])
+    dt = x.dtype
+    r = jnp.einsum("bd,dh->bh", mr, p["wr"].astype(dt))
+    k = jnp.einsum("bd,dh->bh", mk, p["wk"].astype(dt))
+    v = jnp.einsum("bd,dh->bh", mv, p["wv"].astype(dt))
+    g = jax.nn.silu(jnp.einsum("bd,dh->bh", mg, p["wg"].astype(dt)))
+    w = _decay(cfg, p, mw)
+    rs = r.reshape(B, H, D).astype(jnp.float32)
+    ks = k.reshape(B, H, D).astype(jnp.float32)
+    vs = v.reshape(B, H, D).astype(jnp.float32)
+    ws = w.reshape(B, H, D)
+    u = p["u"].reshape(H, D)
+    S = cache["wkv"]
+    kv = ks[..., :, None] * vs[..., None, :]
+    y = jnp.einsum("bhk,bhkv->bhv", rs, S + u[..., None] * kv)
+    S = ws[..., None] * S + kv
+    y = y.reshape(B, d).astype(dt)
+    y = rmsnorm(y, p["ln_x"], cfg.rms_eps) * g
+    out = jnp.einsum("bh,hd->bd", y, p["wo"].astype(dt))[:, None, :]
+    return out, {"tshift": xt, "cshift": cache["cshift"], "wkv": S}
+
+
+def rwkv_decode_channel(cfg: ModelConfig, p: Params, x: jax.Array,
+                        cshift: jax.Array,
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """One-token channel-mix step.  x: [B,1,d] (post-ln2 input)."""
+    xt = x[:, 0, :]
+    out = rwkv_channel_mix(cfg, p, xt[:, None, :], cshift[:, None, :])
+    return out, xt

@@ -1,0 +1,6 @@
+from repro.optim.adamw import (  # noqa: F401
+    init_state, state_axes, adamw_update, clip_by_global_norm, global_norm,
+    q8_encode, q8_decode,
+)
+from repro.optim.schedule import lr_at  # noqa: F401
+from repro.optim.compress import init_error, compress_decompress  # noqa: F401

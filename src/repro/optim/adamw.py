@@ -1,0 +1,161 @@
+"""AdamW with optional blockwise-int8 moment quantization.
+
+Pure-pytree implementation (no optax in this environment).  The int8 path
+stores ``m``/``v`` as int8 codes plus per-block f32 scales along the last
+dim — 398 B-param Jamba's optimizer state drops from 12 to ~2.3 bytes/param,
+which is what lets the single-pod (256 x 16 GB) train cell fit
+(EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config.base import OptimConfig
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# blockwise int8 codec
+# ---------------------------------------------------------------------------
+
+def _blocks(n: int, block: int) -> int:
+    return -(-n // block)
+
+
+def q8_encode(x: jax.Array, block: int) -> Tuple[jax.Array, jax.Array]:
+    """x [..., D] -> (codes int8 [..., D], scales f32 [..., nb])."""
+    D = x.shape[-1]
+    nb = _blocks(D, block)
+    pad = nb * block - D
+    xp = jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    xb = xp.reshape(*x.shape[:-1], nb, block)
+    scale = jnp.max(jnp.abs(xb), axis=-1) / 127.0
+    safe = jnp.where(scale == 0.0, 1.0, scale)
+    codes = jnp.clip(jnp.round(xb / safe[..., None]), -127, 127
+                     ).astype(jnp.int8)
+    return codes.reshape(*x.shape[:-1], nb * block)[..., :D], scale
+
+
+def q8_decode(codes: jax.Array, scale: jax.Array, block: int) -> jax.Array:
+    D = codes.shape[-1]
+    nb = scale.shape[-1]
+    pad = nb * block - D
+    cp = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    xb = cp.reshape(*codes.shape[:-1], nb, block).astype(jnp.float32)
+    out = xb * scale[..., None]
+    return out.reshape(*codes.shape[:-1], nb * block)[..., :D]
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def init_state(params: Params, cfg: OptimConfig) -> Dict[str, Any]:
+    zeros_like_f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    if cfg.state_dtype == "int8":
+        def zq(p):
+            return {
+                "q": jnp.zeros(p.shape, jnp.int8),
+                "s": jnp.zeros(p.shape[:-1]
+                               + (_blocks(p.shape[-1] if p.ndim else 1,
+                                          cfg.int8_block),), jnp.float32),
+            }
+        mk = lambda p: zq(p if p.ndim else p.reshape(1))
+        m = jax.tree.map(mk, params)
+        v = jax.tree.map(mk, params)
+    else:
+        m = jax.tree.map(zeros_like_f32, params)
+        v = jax.tree.map(zeros_like_f32, params)
+    return {"m": m, "v": v, "count": jnp.zeros((), jnp.int32)}
+
+
+def state_axes(param_axes_tree: Any, cfg: OptimConfig) -> Dict[str, Any]:
+    """Optimizer-state logical axes mirror the parameter axes."""
+    is_ax = lambda x: isinstance(x, tuple)
+    if cfg.state_dtype == "int8":
+        def mk(ax):
+            return {"q": ax, "s": ax[:-1] + (None,) if ax else (None,)}
+        m = jax.tree.map(mk, param_axes_tree, is_leaf=is_ax)
+        v = jax.tree.map(mk, param_axes_tree, is_leaf=is_ax)
+    else:
+        m = param_axes_tree
+        v = param_axes_tree
+    return {"m": m, "v": v, "count": ()}
+
+
+# ---------------------------------------------------------------------------
+# update
+# ---------------------------------------------------------------------------
+
+def global_norm(tree: Params) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Params, max_norm: float,
+                        ) -> Tuple[Params, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def _decay_mask(path: Tuple, p: jax.Array) -> bool:
+    """Weight decay on matrices only (skip norms/biases/scalars)."""
+    return p.ndim >= 2
+
+
+def adamw_update(grads: Params, state: Dict[str, Any], params: Params,
+                 lr: jax.Array, cfg: OptimConfig) -> Tuple[Params, Dict]:
+    count = state["count"] + 1
+    cf = count.astype(jnp.float32)
+    bc1 = 1.0 - cfg.b1 ** cf
+    bc2 = 1.0 - cfg.b2 ** cf
+    blk = cfg.int8_block
+    use_q8 = cfg.state_dtype == "int8"
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        if use_q8:
+            g2 = g32 if g32.ndim else g32.reshape(1)
+            m_f = q8_decode(m["q"], m["s"], blk)
+            v_f = q8_decode(v["q"], v["s"], blk)
+            m_new = cfg.b1 * m_f + (1 - cfg.b1) * g2
+            v_new = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g2)
+        else:
+            m_new = cfg.b1 * m + (1 - cfg.b1) * g32
+            v_new = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g32)
+        mh = m_new / bc1
+        vh = v_new / bc2
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if use_q8 and not g32.ndim:
+            step = step.reshape(())
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_p = (p.astype(jnp.float32) - lr * (step + wd *
+                                               p.astype(jnp.float32)))
+        if use_q8:
+            mq, ms = q8_encode(m_new, blk)
+            vq, vs = q8_encode(v_new, blk)
+            return new_p.astype(p.dtype), {"q": mq, "s": ms}, \
+                {"q": vq, "s": vs}
+        return new_p.astype(p.dtype), m_new, v_new
+
+    is_state_leaf = (lambda x: isinstance(x, dict) and set(x) == {"q", "s"}) \
+        if use_q8 else None
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"]) if use_q8 else \
+        jax.tree.leaves(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"]) if use_q8 else \
+        jax.tree.leaves(state["v"])
+    flat_p = jax.tree.leaves(params)
+    outs = [upd(g, m, v, p)
+            for g, m, v, p in zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in outs])
+    new_m = treedef.unflatten([o[1] for o in outs])
+    new_v = treedef.unflatten([o[2] for o in outs])
+    return new_p, {"m": new_m, "v": new_v, "count": count}

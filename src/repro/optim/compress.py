@@ -1,0 +1,48 @@
+"""Error-feedback int8 gradient compression (cross-pod sync trick).
+
+The XUFS reading: cross-pod links are the "WAN"; gradients shipped across
+them get compressed with residual error feedback so the quantization error
+is re-injected next step instead of lost (convergence-preserving, cf.
+1-bit SGD / EF-SGD lineage).
+
+Under ``jit`` the compression is applied to the global gradient before the
+optimizer; on a real multi-pod deployment the same codec wraps the
+cross-pod all-reduce inside ``shard_map`` (see parallel/collectives.py).
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim.adamw import q8_encode, q8_decode
+
+Params = Any
+BLOCK = 256
+
+
+def init_error(params: Params) -> Params:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_decompress(grads: Params, error: Params,
+                        ) -> Tuple[Params, Params]:
+    """Returns (decompressed grads as seen post-allreduce, new error fb)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32) + e
+        flat = g32.reshape(1, -1) if g32.ndim == 0 else g32
+        q, s = q8_encode(flat, BLOCK)
+        deq = q8_decode(q, s, BLOCK)
+        if g32.ndim == 0:
+            deq = deq.reshape(())
+        new_e = g32 - deq
+        return deq.astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, error)
+    deq = jax.tree.map(lambda t: t[0], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    err = jax.tree.map(lambda t: t[1], out,
+                       is_leaf=lambda x: isinstance(x, tuple))
+    return deq, err

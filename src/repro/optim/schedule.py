@@ -1,0 +1,16 @@
+"""LR schedules: linear warmup + cosine decay."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.config.base import OptimConfig
+
+
+def lr_at(step, cfg: OptimConfig):
+    s = jnp.asarray(step, jnp.float32)
+    warm = jnp.minimum(s / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    total = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((s - cfg.warmup_steps) / total, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    floor = 0.1
+    return cfg.lr * warm * (floor + (1 - floor) * cos)

@@ -1,0 +1,3 @@
+from repro.parallel.context import (  # noqa: F401
+    ShardingCtx, sharding_ctx, current_ctx, shard,
+)

@@ -1,0 +1,60 @@
+"""Active-mesh sharding context.
+
+Models annotate activations with *logical* axis names; when a
+:class:`ShardingCtx` is active those names resolve to mesh axes and a
+``with_sharding_constraint`` is applied, otherwise the call is a no-op —
+so the same model code runs single-device (tests) and multi-pod (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+
+_STATE = threading.local()
+
+
+@dataclass
+class ShardingCtx:
+    mesh: Mesh
+    # logical activation/param axis name -> mesh axis (or tuple of axes)
+    rules: Dict[str, MeshAxes] = field(default_factory=dict)
+
+    def spec(self, logical: Sequence[Optional[str]]) -> P:
+        out = []
+        for name in logical:
+            out.append(None if name is None else self.rules.get(name))
+        return P(*out)
+
+    def sharding(self, logical: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(logical))
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_STATE, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_ctx(ctx: Optional[ShardingCtx]):
+    prev = current_ctx()
+    _STATE.ctx = ctx
+    try:
+        yield ctx
+    finally:
+        _STATE.ctx = prev
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the logical spec if a mesh context is active."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"rank mismatch: {logical} for shape {x.shape}")
+    return jax.lax.with_sharding_constraint(x, ctx.sharding(logical))

@@ -1,0 +1,142 @@
+"""Logical-axis -> mesh-axis sharding policies.
+
+Two policies, mirroring the paper mapping (DESIGN.md §5):
+
+* ``baseline``  — plain DP x TP: parameters TP-sharded on ``model`` only,
+  replicated across ``data`` (and ``pod``); the "remote-everything"
+  reference point.
+* ``fsdp``      — the XUFS-adapted *cached* layout: parameters stay
+  replicated across pods (each pod holds a whole cached copy) but are
+  ZeRO-3 sharded on ``data`` *within* the pod along their d_model
+  ("embed") dimension, with TP on ``model``.  The layer scan then wraps
+  per-layer all-gather / reduce-scatter — the collective-layer analogue
+  of XUFS's striped, overlappable transfers.
+
+Weight tensors use FLATTENED head dims ("heads"/"kv"), which divide the
+16-way model axis for every assigned arch (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.config.base import ShardingConfig
+from repro.parallel.context import ShardingCtx
+
+# Logical axes that carry tensor-parallel shards.
+_TP_AXES = ("vocab", "heads", "kv", "mlp", "experts", "inner", "embed2",
+            "vocab_act", "heads_act", "kv_act", "inner_act", "mlp_act")
+
+
+def make_rules(cfg: ShardingConfig, *, multi_pod: bool,
+               decode: bool = False) -> Dict[str, Any]:
+    """Build the logical->mesh mapping for one (policy, topology, cell)."""
+    tp = cfg.tp_axis
+    batch_axes = (cfg.pod_axis, cfg.fsdp_axis) if multi_pod else cfg.fsdp_axis
+    rules: Dict[str, Any] = {
+        # ---- parameters -------------------------------------------------
+        "vocab": tp,
+        "heads": tp,
+        "kv": tp,
+        "mlp": tp,
+        "expert_mlp": None,
+        "experts": tp,          # EP: experts across the model axis
+        "inner": tp,            # mamba d_inner
+        "embed2": tp,           # rwkv channel-mix receptance out dim
+        "embed": None,
+        "layers": None,
+        "sublayer": None,
+        # ---- activations ---------------------------------------------------
+        "batch": batch_axes,
+        "embed_act": None,
+        "vocab_act": tp,
+        "heads_act": tp,
+        "kv_act": tp,
+        "inner_act": tp,
+        "experts_act": tp,   # EP-sharded dispatch buffers
+        "heads_dim": tp,     # expanded attention heads (post repeat_kv)
+        "kv_seq": None,
+    }
+    if cfg.policy == "fsdp":
+        # ZeRO-3 within the pod: shard the d_model dim of weights on data
+        rules["embed"] = cfg.fsdp_axis
+    if cfg.shard_seq and decode:
+        # long-context decode (batch too small to shard): SP on the cache
+        rules["batch"] = None
+        rules["kv_seq"] = cfg.fsdp_axis
+    return rules
+
+
+def make_ctx(mesh: Mesh, cfg: ShardingConfig, *, decode: bool = False,
+             ) -> ShardingCtx:
+    multi_pod = "pod" in mesh.axis_names
+    return ShardingCtx(mesh=mesh,
+                       rules=make_rules(cfg, multi_pod=multi_pod,
+                                        decode=decode))
+
+
+def tree_shardings(ctx: ShardingCtx, axes_tree: Any):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda ax: ctx.sharding(ax),
+        axes_tree, is_leaf=lambda x: isinstance(x, tuple))
+
+
+def batch_shardings(ctx: ShardingCtx, batch_tree: Any):
+    """Shardings for an input batch: leading batch dim sharded.
+
+    VLM positions are [3, B, S] (batch on dim 1); everything else [B, ...].
+    """
+    out = {}
+    for name, leaf in batch_tree.items():
+        if name == "positions" and leaf.ndim == 3:
+            # VLM M-RoPE positions are [3, B, S]: batch on dim 1
+            out[name] = ctx.sharding((None, "batch", None))
+        else:
+            out[name] = ctx.sharding(("batch",) + (None,) * (leaf.ndim - 1))
+    return out
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def sanitize_shardings(shardings, shapes):
+    """Drop mesh axes from dims they don't divide (explicit pjit
+    in_shardings require divisibility; propagation would pad instead).
+
+    E.g. seamless's vocab 256206 on a 16-way model axis, or RWKV6's 40
+    heads: those dims fall back to replication, everything else keeps its
+    sharding.  Both trees must be isomorphic; ``shapes`` leaves need
+    ``.shape``.
+    """
+    def fix(sh, spec_leaf):
+        if not isinstance(sh, NamedSharding):
+            return sh
+        shape = spec_leaf.shape
+        parts = list(sh.spec) + [None] * (len(shape) - len(sh.spec))
+        changed = False
+        for i, axes in enumerate(parts):
+            n = _axis_size(sh.mesh, axes)
+            if n > 1 and shape[i] % n != 0:
+                parts[i] = None
+                changed = True
+        if not changed:
+            return sh
+        return NamedSharding(sh.mesh, P(*parts))
+
+    return jax.tree.map(fix, shardings, shapes,
+                        is_leaf=lambda x: isinstance(x, NamedSharding))

@@ -1,0 +1,154 @@
+"""Batched serving engine: slot-based continuous batching over the KV cache.
+
+``ServeEngine`` holds a fixed pool of batch slots.  Requests are admitted
+into free slots, prefilled (one request at a time — prompt lengths vary),
+then all active slots decode together with one jitted ``decode_step`` per
+token.  Weights arrive through the XUFS fabric (striped restore +
+small-tensor prefetch) via serve/loader.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config.base import ModelConfig
+from repro.models import init_cache, prefill, decode_step
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    output: List[int] = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass
+class SlotState:
+    rid: int = -1
+    active: bool = False
+    remaining: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: Any, *, slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.max_len = max_len
+        self.cache = init_cache(cfg, slots, max_len)
+        self.slot_states = [SlotState() for _ in range(slots)]
+        self.requests: Dict[int, Request] = {}
+        self.queue: List[int] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(self.cfg, p, t, c))
+        # per-slot last emitted token (feeds the next decode step)
+        self.last_tokens = np.zeros((slots, 1), np.int32)
+        self.tokens_generated = 0
+
+    # ---- admission ----------------------------------------------------------
+    def add_request(self, req: Request) -> None:
+        self.requests[req.rid] = req
+        self.queue.append(req.rid)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, s in enumerate(self.slot_states):
+            if not s.active:
+                return i
+        return None
+
+    def _admit(self) -> int:
+        """Prefill queued requests into free slots."""
+        admitted = 0
+        while self.queue:
+            slot = self._free_slot()
+            if slot is None:
+                break
+            rid = self.queue.pop(0)
+            req = self.requests[rid]
+            toks = jnp.asarray(req.prompt, jnp.int32)[None, :]
+            S = toks.shape[1]
+            batch = {
+                "tokens": toks,
+                "positions": jnp.arange(S, dtype=jnp.int32)[None, :],
+            }
+            logits, cache1 = prefill(self.cfg, self.params, batch,
+                                     max_len=self.max_len)
+            # splice this request's prefilled cache into the shared pool
+            self._splice_cache(slot, cache1)
+            tok = self._sample(logits[:, -1, :], req.temperature)
+            req.output.append(int(tok[0]))
+            self.last_tokens[slot, 0] = int(tok[0])
+            st = self.slot_states[slot]
+            st.rid, st.active, st.remaining = rid, True, \
+                req.max_new_tokens - 1
+            admitted += 1
+        return admitted
+
+    def _splice_cache(self, slot: int, cache1: Any) -> None:
+        def splice(pool, one):
+            if pool.ndim == 0 or one.ndim == 0:
+                return pool
+            # slot batch axis is dim 1 for [L, B, ...] entries
+            return jax.lax.dynamic_update_slice_in_dim(
+                pool, one.astype(pool.dtype), slot, axis=1)
+
+        new_cache = {}
+        for k, vpool in self.cache.items():
+            if k == "index":
+                # per-slot write positions (continuous batching)
+                new_cache[k] = jax.lax.dynamic_update_slice_in_dim(
+                    vpool, cache1[k].astype(vpool.dtype), slot, axis=0)
+                continue
+            new_cache[k] = splice(vpool, cache1[k])
+        self.cache = new_cache
+
+    # ---- sampling --------------------------------------------------------------
+    def _sample(self, logits: jax.Array, temperature: float) -> np.ndarray:
+        if temperature <= 0.0:
+            return np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        self.key, sub = jax.random.split(self.key)
+        return np.asarray(
+            jax.random.categorical(sub, logits / temperature, axis=-1),
+            np.int32)
+
+    # ---- one engine tick -----------------------------------------------------
+    def step(self) -> int:
+        """Admit + one decode for all active slots.  Returns tokens emitted."""
+        self._admit()
+        if not any(s.active for s in self.slot_states):
+            return 0
+        toks = jnp.asarray(self.last_tokens)
+        logits, self.cache = self._decode(self.params, toks, self.cache)
+        emitted = 0
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1), np.int32)
+        for i, st in enumerate(self.slot_states):
+            if not st.active:
+                continue
+            req = self.requests[st.rid]
+            tok = int(nxt[i])
+            req.output.append(tok)
+            self.last_tokens[i, 0] = tok
+            st.remaining -= 1
+            emitted += 1
+            self.tokens_generated += 1
+            if st.remaining <= 0:
+                req.done = True
+                st.active = False
+                st.rid = -1
+        return emitted
+
+    def run_until_done(self, max_ticks: int = 1000) -> None:
+        for _ in range(max_ticks):
+            if not self.queue and not any(s.active for s in self.slot_states):
+                return
+            self.step()

@@ -1,0 +1,5 @@
+from repro.train.step import (  # noqa: F401
+    make_train_step, make_eval_step, make_opt_state,
+)
+from repro.train.loop import Trainer, TrainResult  # noqa: F401
+from repro.train.fault import FaultMonitor, FaultEvent  # noqa: F401

@@ -1,0 +1,179 @@
+"""End-to-end XUFS fabric: caching, callbacks, disconnected ops, security."""
+import os
+
+import pytest
+
+from repro.core import (
+    Network, ussh_login, DisconnectedError, AuthError, KeyPhrase,
+)
+from repro.core.transport import respond, verify, make_challenge
+
+
+@pytest.fixture()
+def session(tmp_path):
+    net = Network()
+    return ussh_login("sci", net, str(tmp_path / "home"),
+                      str(tmp_path / "site"),
+                      mounts={"home/": ["home/scratch/raw/"]})
+
+
+def test_whole_file_cache_hit_after_first_open(session):
+    s = session
+    s.server.store.put(s.token, "home/data/a.bin", b"A" * 100_000)
+    with s.client.open("home/data/a.bin") as f:
+        assert f.read() == b"A" * 100_000
+    misses0 = s.client.cache.misses
+    clock0 = s.client.network.clock
+    with s.client.open("home/data/a.bin") as f:
+        assert f.read() == b"A" * 100_000
+    assert s.client.cache.misses == misses0        # no refetch
+    assert s.client.network.clock == clock0        # zero WAN time
+
+
+def test_opendir_populates_attrs_without_data(session):
+    s = session
+    for i in range(5):
+        s.server.store.put(s.token, f"home/src/f{i}.c", b"x" * 200_000)
+    s.client.opendir("home/src")
+    # stat() served from hidden attr files: no further RPC
+    rpc0 = s.client.network.rpc_count
+    st = s.client.stat("home/src/f3.c")
+    assert st is not None and st.size == 200_000
+    assert s.client.network.rpc_count == rpc0
+
+
+def test_write_behind_never_blocks_and_syncs(session):
+    s = session
+    clock0 = s.client.network.clock
+    with s.client.open("home/out/result.dat", "w") as f:
+        f.write(b"R" * 300_000)
+    assert s.client.network.clock == clock0   # close() returned locally
+    assert len(s.client.oplog.pending()) == 1
+    s.client.sync()
+    data, st = s.server.store.get(s.token, "home/out/result.dat")
+    assert data == b"R" * 300_000
+
+
+def test_localized_dir_never_ships_home(session):
+    s = session
+    with s.client.open("home/scratch/raw/big.out", "w") as f:
+        f.write(b"Z" * 500_000)
+    assert s.client.oplog.pending() == []
+    s.client.sync()
+    with pytest.raises(FileNotFoundError):
+        s.server.store.get(s.token, "home/scratch/raw/big.out")
+    # but locally readable
+    with s.client.open("home/scratch/raw/big.out") as f:
+        assert f.read() == b"Z" * 500_000
+
+
+def test_callback_invalidation_refetches(session):
+    s = session
+    s.server.store.put(s.token, "home/data/x", b"old")
+    with s.client.open("home/data/x") as f:
+        assert f.read() == b"old"
+    s.server.store.put(s.token, "home/data/x", b"new contents")
+    s.client.pump_callbacks()
+    entry = s.client.cache.lookup("home/data/x")
+    assert entry.state == "invalid"
+    with s.client.open("home/data/x") as f:
+        assert f.read() == b"new contents"
+
+
+def test_disconnected_reads_from_cache_and_queues_writes(session):
+    s = session
+    s.server.store.put(s.token, "home/data/x", b"cached")
+    with s.client.open("home/data/x") as f:
+        f.read()
+    s.client.network.partition("site", "home")
+    with s.client.open("home/data/x") as f:
+        assert f.read() == b"cached"          # stale-but-available
+    with s.client.open("home/out/offline", "w") as f:
+        f.write(b"queued")
+    assert s.client.pump() == 0               # WAN down: stays queued
+    s.client.network.heal("site", "home")
+    assert s.client.pump() >= 1
+    assert s.server.store.get(s.token, "home/out/offline")[0] == b"queued"
+
+
+def test_uncached_read_while_disconnected_raises(session):
+    s = session
+    s.server.store.put(s.token, "home/data/never_opened", b"x")
+    s.client.network.partition("site", "home")
+    with pytest.raises(DisconnectedError):
+        s.client.open("home/data/never_opened")
+
+
+def test_server_crash_reconnect_revalidates(session):
+    s = session
+    s.server.store.put(s.token, "home/data/x", b"v1")
+    with s.client.open("home/data/x") as f:
+        f.read()
+    s.client.pump_callbacks()   # drain the (version-stale) v1 notification
+    # crash drops subscriptions; a direct put now yields NO callback
+    s.server.store._subscribers.clear()
+    st = s.server.store.put(s.token, "home/data/x", b"v2-silent")
+    assert s.client.pump_callbacks() == 0
+    # reconnect: re-register + version revalidation catches the change
+    stale = s.client.reconnect()
+    assert stale == 1
+    with s.client.open("home/data/x") as f:
+        assert f.read() == b"v2-silent"
+
+
+def test_auth_challenge_rejects_wrong_key(tmp_path):
+    net = Network()
+    s = ussh_login("sci", net, str(tmp_path / "h"), str(tmp_path / "s"))
+    wrong = KeyPhrase.generate()
+    with pytest.raises(AuthError):
+        s.server.store.authenticate(lambda ch: respond(wrong, ch))
+    with pytest.raises(AuthError):
+        s.server.store.get("bogus-token", "home/x")
+
+
+def test_challenge_response_is_keyphrase_bound():
+    kp1, kp2 = KeyPhrase.generate(), KeyPhrase.generate()
+    ch = make_challenge()
+    assert verify(kp1, ch, respond(kp1, ch))
+    assert not verify(kp1, ch, respond(kp2, ch))
+
+
+def test_lock_lease_expiry(session):
+    s = session
+    assert s.client.lock("home/data/shared")
+    lm = s.client.leases["home/"]
+    assert s.server.store.lock_owner("home/data/shared",
+                                     s.client.network.clock) == "sci"
+    # time passes beyond TTL without renewal -> lock expires
+    s.client.network.advance(lm.ttl + 1)
+    assert s.server.store.lock_owner("home/data/shared",
+                                     s.client.network.clock) is None
+    # renewal keeps it alive
+    assert s.client.lock("home/data/shared")
+    lm.renew_all()
+    assert s.server.store.lock_owner("home/data/shared",
+                                     s.client.network.clock) == "sci"
+
+
+def test_localized_lock_is_local(session):
+    s = session
+    rpc0 = s.client.network.rpc_count
+    assert s.client.lock("home/scratch/raw/file")
+    assert s.client.network.rpc_count == rpc0   # no WAN RPC
+
+
+def test_prefetch_small_files_on_chdir(session):
+    s = session
+    for i in range(30):
+        s.server.store.put(s.token, f"home/src/s{i}.c", b"c" * 1000)
+    s.server.store.put(s.token, "home/src/big.bin", b"B" * 200_000)
+    n = s.client.chdir("home/src")
+    assert n == 30                      # only the small files
+    # all small files now served without WAN
+    rpc0 = s.client.network.rpc_count
+    for i in range(30):
+        with s.client.open(f"home/src/s{i}.c") as f:
+            assert f.read() == b"c" * 1000
+    assert s.client.network.rpc_count == rpc0
+    # big file still needs a fetch
+    assert s.client.cache.lookup("home/src/big.bin").state == "empty"

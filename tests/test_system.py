@@ -1,0 +1,62 @@
+"""End-to-end system test: the paper's workflow (§2.1) on the full stack.
+
+develop locally -> mount at the pod -> prefetch sources -> cache input ->
+train with write-behind checkpoints -> survive a WAN disconnect mid-run ->
+analyze results back at home -> raw output stays localized.
+"""
+import numpy as np
+import pytest
+
+from repro.core import Network, ussh_login
+from repro.config import RunConfig, ShapeConfig, OptimConfig
+from repro.configs import get_tiny_config
+from repro.checkpoint import CheckpointManager
+from repro.data.pipeline import SyntheticCorpus, DataPipeline
+from repro.train import Trainer
+
+
+def test_full_workflow(tmp_path):
+    net = Network()
+    s = ussh_login("sci", net, str(tmp_path / "laptop"),
+                   str(tmp_path / "pod"),
+                   mounts={"home/": ["home/scratch/raw/"]})
+    cfg = get_tiny_config("qwen3-4b")
+
+    # 1-3: code + input data prepared at home, imported at the pod
+    for i in range(8):
+        s.server.store.put(s.token, f"home/src/mod{i}.py", b"# sim\n" * 100)
+    assert s.client.chdir("home/src") == 8        # parallel prefetch
+    SyntheticCorpus(s.client, "home/input", seed=1, vocab=cfg.vocab_size,
+                    shard_tokens=4096).materialize(2)
+
+    # 4: the run — write-behind checkpoints, localized raw dumps
+    pipe = DataPipeline(s.client, "home/input", cfg, batch=4, seq=32,
+                        n_shards=2)
+    run = RunConfig(model=cfg, shape=ShapeConfig("sys", "train", 32, 4),
+                    optim=OptimConfig(lr=1e-3, warmup_steps=3,
+                                      total_steps=50))
+    ckpt = CheckpointManager(s.client, "home/ckpt")
+    tr = Trainer(run, pipe, ckpt, ckpt_every=4)
+    res1 = tr.train(6)
+    with s.client.open("home/scratch/raw/activations.bin", "w") as f:
+        f.write(b"\x00" * 1_000_000)
+
+    # the laptop drops off the WAN mid-run: training continues
+    net.partition("pod", "laptop")
+    res2 = tr.train(6)
+    assert len(res2.losses) == 6                  # no stall
+    assert len(s.client.oplog.pending()) > 0      # checkpoints queued
+
+    # 5-6: reconnect; queue drains; results appear at home in WAL order
+    net.heal("pod", "laptop")
+    s.client.sync()
+    assert ckpt.latest_step() == 12
+    restored, manifest = ckpt.restore(tr._state_tree())
+    np.testing.assert_allclose(np.asarray(restored["params"]["final_norm"]),
+                               np.asarray(tr.params["final_norm"]))
+
+    # 7: raw output never crossed the WAN
+    with pytest.raises(FileNotFoundError):
+        s.server.store.get(s.token, "home/scratch/raw/activations.bin")
+    # and the losses behaved
+    assert np.isfinite(res1.losses + res2.losses).all()
