@@ -1,0 +1,102 @@
+"""Cold-read latency vs. replica count on the simulated WAN.
+
+A user's home space sits behind a high-RTT link (60 ms); read replicas are
+placed at nearby sites (4-16 ms).  Each row sweeps a cold cache over
+``N_FILES`` objects and reports the modeled WAN seconds:
+
+    replica_read/cold_replicas=<n>,us_per_call,<modeled seconds>
+
+The final rows inject faults: with the nearest replica partitioned the
+sweep degrades to the next source (ultimately home) instead of erroring.
+Run standalone, the script exits non-zero if replicas do not strictly beat
+the single-home baseline — the acceptance gate for the replica fabric.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, timed
+
+N_FILES = 8
+HOME_LATENCY = 0.060
+REPLICA_COUNTS = (0, 1, 2, 4)
+
+
+def _build_session(n_replicas: int, root: str, tag: str, file_size: int):
+    from repro.core import LinkModel, Network, ussh_login
+
+    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
+    sites = {f"r{i + 1}": 0.004 * (i + 1) for i in range(n_replicas)}
+    s = ussh_login("bench", net, f"{root}/home-{tag}", f"{root}/site-{tag}",
+                   replica_sites=sites or None)
+    for i in range(N_FILES):
+        s.server.store.put(s.token, f"home/data/f{i}.bin", b"x" * file_size)
+    if s.replicas is not None:
+        s.replicas.resync()
+    return s
+
+
+def _cold_sweep(s, file_size: int) -> float:
+    t0 = s.client.network.clock
+    for i in range(N_FILES):
+        with s.client.open(f"home/data/f{i}.bin") as f:
+            assert len(f.read()) == file_size
+    return s.client.network.clock - t0
+
+
+def run() -> int:
+    from repro.core import MB
+
+    file_size = 4 * MB
+    root = tempfile.mkdtemp(prefix="fig_replica_read_")
+    failures = []
+    try:
+        modeled = {}
+        for n in REPLICA_COUNTS:
+            s = _build_session(n, root, f"n{n}", file_size)
+            us, dt = timed(lambda s=s: _cold_sweep(s, file_size))
+            modeled[n] = dt
+            emit(f"replica_read/cold_replicas={n}_s", us, f"{dt:.4f}")
+        for n in REPLICA_COUNTS[1:]:
+            if not modeled[n] < modeled[0]:
+                failures.append(
+                    f"{n} replicas ({modeled[n]:.4f}s) not faster than "
+                    f"single-home baseline ({modeled[0]:.4f}s)")
+
+        # fault: nearest replica partitioned -> degrade to the 2nd replica
+        s = _build_session(2, root, "part2", file_size)
+        s.client.network.partition("site", "r1")
+        us, dt = timed(lambda: _cold_sweep(s, file_size))
+        emit("replica_read/cold_2replicas_nearest_partitioned_s", us,
+             f"{dt:.4f}")
+        if s.client.cache.fills_from.get("r2") != N_FILES:
+            failures.append("partitioned r1 did not fall back to r2")
+
+        # fault: only replica partitioned -> degrade all the way to home
+        s = _build_session(1, root, "part1", file_size)
+        s.client.network.partition("site", "r1")
+        us, dt = timed(lambda: _cold_sweep(s, file_size))
+        emit("replica_read/cold_1replica_partitioned_home_fallback_s", us,
+             f"{dt:.4f}")
+        if s.client.cache.fills_from.get("home") != N_FILES:
+            failures.append("partitioned replica did not fall back to home")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)   # keep stdout valid CSV
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    rc = run()
+    if rc == 0:
+        print("replica_read: OK (replicas beat home; partitions degrade, "
+              "never error)")
+    raise SystemExit(rc)

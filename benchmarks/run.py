@@ -13,17 +13,19 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
-def main() -> None:
+def main() -> int:
     print("name,us_per_call,derived")
     from benchmarks import (
         table1_sizes, fig23_iozone, fig4_build, fig5_largefile,
-        sharing_census, roofline,
+        fig_replica_read, sharing_census, roofline,
     )
 
+    rc = 0
     for mod in (table1_sizes, fig23_iozone, fig4_build, fig5_largefile,
-                sharing_census, roofline):
-        mod.run()
+                fig_replica_read, sharing_census, roofline):
+        rc |= int(mod.run() or 0)   # self-checking benchmarks gate the run
+    return rc
 
 
 if __name__ == "__main__":
-    main()
+    raise SystemExit(main())

@@ -11,6 +11,9 @@ from repro.core.store import HomeStore, ObjectStat  # noqa: F401
 from repro.core.cache import CacheSpace, CacheEntry  # noqa: F401
 from repro.core.oplog import MetaOpQueue, OpRecord  # noqa: F401
 from repro.core.callbacks import NotificationManager  # noqa: F401
+from repro.core.replication import (  # noqa: F401
+    Replica, ReplicaCatalog, ReplicaSet,
+)
 from repro.core.lease import LeaseManager  # noqa: F401
 from repro.core.namespace import XufsClient, XufsFile, Mount  # noqa: F401
 from repro.core.prefetch import Prefetcher  # noqa: F401

@@ -49,6 +49,11 @@ class CacheSpace:
         self.hits = 0
         self.misses = 0
         self.invalidations = 0
+        # endpoint name -> number of cache fills it served (replica routing)
+        self.fills_from: Dict[str, int] = {}
+
+    def record_fill(self, source: str) -> None:
+        self.fills_from[source] = self.fills_from.get(source, 0) + 1
 
     # ---- paths: data file + hidden attr file alongside -------------------
     def data_path(self, path: str) -> str:

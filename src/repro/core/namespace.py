@@ -26,6 +26,7 @@ from repro.core.cache import (
 from repro.core.callbacks import NotificationManager
 from repro.core.lease import LeaseManager
 from repro.core.oplog import MetaOpQueue, OpRecord
+from repro.core.replication import ReadSource, ReplicaSet
 from repro.core.store import HomeStore, ObjectStat
 from repro.core.striping import StripedTransfer
 from repro.core.transport import DisconnectedError, Network
@@ -38,6 +39,7 @@ class Mount:
     store: HomeStore
     token: str
     localized: List[str] = field(default_factory=list)
+    replicas: Optional[ReplicaSet] = None
 
     def is_localized(self, path: str) -> bool:
         return any(path.startswith(ld) for ld in self.localized)
@@ -111,9 +113,11 @@ class XufsClient:
 
     # ---- mounts -----------------------------------------------------------
     def mount(self, prefix: str, server_name: str, store: HomeStore,
-              token: str, localized: Optional[List[str]] = None) -> Mount:
+              token: str, localized: Optional[List[str]] = None,
+              replicas: Optional[ReplicaSet] = None) -> Mount:
         m = Mount(prefix=prefix, server_name=server_name, store=store,
-                  token=token, localized=localized or [])
+                  token=token, localized=localized or [],
+                  replicas=replicas)
         self.mounts[prefix] = m
         nm = NotificationManager(self.network, self.name, server_name,
                                  store, self.cache, prefix=prefix)
@@ -131,12 +135,37 @@ class XufsClient:
         raise FileNotFoundError(f"{path}: not under any XUFS mount")
 
     # ---- cache fill ------------------------------------------------------
+    def _read_sources(self, m: Mount, path: str) -> List[ReadSource]:
+        """Candidate servers for a cache fill, nearest first, home last."""
+        if m.replicas is not None:
+            return m.replicas.route(self.name, path)
+        return [(m.server_name, m.store, m.token)]
+
     def _fetch(self, m: Mount, path: str) -> CacheEntry:
-        """Whole-object striped fetch into cache space."""
-        data, st = m.store.get(m.token, path)
-        self.transfer.send(m.server_name, self.name, data)
-        self.cache.misses += 1
-        return self.cache.store_data(path, data, st, state=VALID)
+        """Whole-object striped fetch into cache space.
+
+        With a replica fabric mounted, sources are tried nearest-first;
+        a partitioned replica falls through to the next candidate (home is
+        always the terminal authority).
+        """
+        last_exc: Optional[Exception] = None
+        for server_name, store, token in self._read_sources(m, path):
+            try:
+                data, st = store.get(token, path)
+                self.transfer.send(server_name, self.name, data)
+            except DisconnectedError as e:
+                last_exc = e
+                continue
+            except FileNotFoundError:
+                if server_name == m.server_name:
+                    raise       # authoritative miss
+                continue        # replica catalog raced a delete; try next
+            self.cache.misses += 1
+            self.cache.record_fill(server_name)
+            return self.cache.store_data(path, data, st, state=VALID)
+        if last_exc is not None:
+            raise last_exc
+        raise FileNotFoundError(path)
 
     def _ensure_cached(self, path: str, create_ok: bool = False) -> bytes:
         m = self._mount_for(path)
@@ -220,29 +249,53 @@ class XufsClient:
         return pf.prefetch_small(path, stats)
 
     # ---- write-behind sync ---------------------------------------------------
+    def _apply_record(self, rec: OpRecord, data: Optional[bytes]) -> None:
+        """Apply one queued op: home first (authoritative), then fan out.
+
+        The replica fan-out runs after the home apply and absorbs WAN
+        faults internally, so a lagging or partitioned replica never
+        blocks the flusher; a crash between the home apply and the fan-out
+        leaves the record pending, and ``replay()`` re-converges.
+        """
+        m = self._mount_for(rec.path)
+        if rec.op == "store":
+            assert data is not None
+            self.transfer.send(self.name, m.server_name, data)
+            st = m.store.put(m.token, rec.path, data)
+            cur = self.cache.lookup(rec.path)
+            if cur is not None and cur.state == DIRTY:
+                self.cache.write_entry(CacheEntry(
+                    path=rec.path, state=VALID, stat=st))
+            if m.replicas is not None:
+                m.replicas.propagate(rec.path, data, st)
+        elif rec.op == "delete":
+            self.network.rpc(self.name, m.server_name, "delete")
+            try:
+                m.store.delete(m.token, rec.path)
+            except FileNotFoundError:
+                pass
+            if m.replicas is not None:
+                m.replicas.propagate_delete(rec.path)
+
     def pump(self, max_ops: Optional[int] = None) -> int:
         """Drain the meta-op queue to home (the background flusher tick)."""
-        applied = 0
+        return self.oplog.flush(self._apply_record, max_ops=max_ops)
 
-        def apply(rec: OpRecord, data: Optional[bytes]) -> None:
-            m = self._mount_for(rec.path)
-            if rec.op == "store":
-                assert data is not None
-                self.transfer.send(self.name, m.server_name, data)
-                st = m.store.put(m.token, rec.path, data)
-                cur = self.cache.lookup(rec.path)
-                if cur is not None and cur.state == DIRTY:
-                    self.cache.write_entry(CacheEntry(
-                        path=rec.path, state=VALID, stat=st))
-            elif rec.op == "delete":
-                self.network.rpc(self.name, m.server_name, "delete")
-                try:
-                    m.store.delete(m.token, rec.path)
-                except FileNotFoundError:
-                    pass
+    def replay(self) -> int:
+        """Post-crash sync: re-drain pending ops, then repair replicas.
 
-        applied = self.oplog.flush(apply, max_ops=max_ops)
-        return applied
+        Records are marked done only after both the home apply and the
+        fan-out complete, so a flusher crash in between replays the whole
+        record; the trailing ``resync`` converges replicas that were
+        partitioned during fan-out or missed notifications.
+        """
+        n = self.oplog.replay(self._apply_record)
+        seen = set()      # mounts may share one ReplicaSet: resync it once
+        for m in self.mounts.values():
+            if m.replicas is not None and id(m.replicas) not in seen:
+                seen.add(id(m.replicas))
+                m.replicas.resync()
+        return n
 
     def sync(self) -> int:
         """Blocking drain (the paper's post-crash sync tool)."""

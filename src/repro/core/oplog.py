@@ -148,6 +148,17 @@ class MetaOpQueue:
                 break
         return done
 
+    def replay(self, apply_fn: Callable[[OpRecord, Optional[bytes]], None],
+               ) -> int:
+        """Post-crash convergence: re-drain every record still pending.
+
+        A record is pending until ``apply_fn`` ran to completion — a crash
+        *between* the authoritative apply and any secondary effect (e.g.
+        the replica fan-out) therefore re-applies the whole record.  Safe
+        because stores overwrite and deletes are tolerant.
+        """
+        return self.flush(apply_fn)
+
     def compact(self) -> None:
         """Rewrite the WAL keeping only pending records."""
         self._compacting = True

@@ -40,26 +40,41 @@ class Prefetcher:
 
         m = cl._mount_for(todo[0].path)
         fetched = 0
+        fetched_bytes = 0
         clock0 = cl.network.clock
         wave_times: List[float] = []
         for i in range(0, len(todo), self.max_workers):
             wave = todo[i:i + self.max_workers]
             t_wave = 0.0
             for st in wave:
-                try:
-                    data, fresh = m.store.get(m.token, st.path)
-                except FileNotFoundError:
+                # nearest fresh replica first; home is the terminal source
+                data = fresh = src = None
+                for server_name, store, token in cl._read_sources(m, st.path):
+                    if cl.network.is_partitioned(cl.name, server_name):
+                        continue
+                    try:
+                        data, fresh = store.get(token, st.path)
+                    except FileNotFoundError:
+                        continue
+                    src = server_name
+                    break
+                if data is None:
                     continue
                 # each worker is an independent single stream; the wave's
                 # wall time is the max over its members.
-                t = cl.network.link.transfer_time(len(data), n_streams=1)
+                t = cl.network.link_between(cl.name, src).transfer_time(
+                    len(data), n_streams=1)
                 t_wave = max(t_wave, t)
                 cl.cache.store_data(st.path, data, fresh, state=VALID)
                 cl.cache.misses += 1
+                cl.cache.record_fill(src)
+                cl.network.account(src, len(data))
+                cl.network.account(cl.name, len(data))
                 fetched += 1
+                fetched_bytes += len(data)
             wave_times.append(t_wave)
         # charge the clock for the parallel waves (not the serial sum)
         cl.network.clock = clock0 + sum(wave_times)
         cl.network.rpc_count += fetched
-        cl.network.bytes_sent += sum(min(s.size, 10**12) for s in todo)
+        cl.network.bytes_sent += fetched_bytes
         return fetched

@@ -1,0 +1,240 @@
+"""Multi-site replica fabric: catalog, nearest-replica reads, fan-out.
+
+XUFS as published assumes a single authoritative home store; this module
+adds SCISPACE-style per-site read replicas on top of the same
+``Network``/``HomeStore`` fabric, following the GridFTP replica-management
+recipe (replica catalog + striped transfer):
+
+  * :class:`ReplicaCatalog` maps ``path -> {endpoint: version}`` plus the
+    home's latest version per path.  A holder is *fresh* iff its version is
+    at least the home version the catalog has seen — callback notifications
+    from the home store keep the catalog current, so a stale replica drops
+    out of the read path the moment home changes (the replica-side
+    equivalent of ``cache.INVALID``).
+  * :class:`ReplicaSet` places the replicas, routes reads to the
+    lowest-latency fresh holder (home is always the terminal fallback),
+    fans writes out home-first-then-replicas so a lagging or partitioned
+    replica never blocks the client, and repairs divergence via
+    ``resync()`` (anti-entropy over the home version vector).
+
+The catalog is metadata colocated with the home service and mirrored to
+clients over the callback channel; lookups are therefore modeled as free —
+only data movement and per-operation RPCs charge the virtual clock.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.core.store import HomeStore, ObjectStat
+from repro.core.striping import StripedTransfer
+from repro.core.transport import DisconnectedError, Network, respond
+
+#: A read source the client can try: (endpoint name, store, auth token).
+ReadSource = Tuple[str, HomeStore, str]
+
+
+class ReplicaCatalog:
+    """``path -> {endpoint: version}`` plus the home version per path."""
+
+    def __init__(self) -> None:
+        self.home_versions: Dict[str, int] = {}
+        self._holders: Dict[str, Dict[str, int]] = {}
+
+    # ---- home side -------------------------------------------------------
+    def note_home(self, path: str, version: int) -> None:
+        self.home_versions[path] = version
+
+    def home_version(self, path: str) -> Optional[int]:
+        return self.home_versions.get(path)
+
+    # ---- holders ---------------------------------------------------------
+    def record(self, path: str, endpoint: str, version: int) -> None:
+        self._holders.setdefault(path, {})[endpoint] = version
+
+    def drop(self, path: str, endpoint: Optional[str] = None) -> None:
+        if endpoint is None:
+            self._holders.pop(path, None)
+            return
+        holders = self._holders.get(path)
+        if holders is not None:
+            holders.pop(endpoint, None)
+
+    def version_at(self, path: str, endpoint: str) -> Optional[int]:
+        return self._holders.get(path, {}).get(endpoint)
+
+    def paths_at(self, endpoint: str) -> List[str]:
+        return [p for p, h in self._holders.items() if endpoint in h]
+
+    def fresh_holders(self, path: str) -> List[str]:
+        """Endpoints holding a version at least as new as home's.
+
+        Unknown home version means the catalog never saw the object — only
+        home can be trusted.  A negative home version is a deletion: nothing
+        is fresh.
+        """
+        hv = self.home_versions.get(path)
+        if hv is None or hv < 0:
+            return []
+        return [ep for ep, v in self._holders.get(path, {}).items()
+                if v >= hv]
+
+
+@dataclass
+class Replica:
+    """One per-site read replica: a HomeStore at its own endpoint."""
+
+    name: str
+    store: HomeStore
+    token: str
+    lagging: Set[str] = field(default_factory=set)   # paths needing repair
+
+
+class ReplicaSet:
+    """Places, routes to, and repairs the read replicas of one home space."""
+
+    def __init__(self, network: Network, home_name: str,
+                 home_store: HomeStore, token: str):
+        self.network = network
+        self.home_name = home_name
+        self.home_store = home_store
+        self.token = token
+        self.replicas: Dict[str, Replica] = {}
+        self.catalog = ReplicaCatalog()
+        self.transfer = StripedTransfer(network)
+        self.fanout_ok = 0
+        self.fanout_deferred = 0
+        home_store.subscribe(self._on_home_change)
+
+    # ---- catalog feed (rides the home callback channel) ------------------
+    def _on_home_change(self, path: str, st: ObjectStat) -> None:
+        self.catalog.note_home(path, st.version)
+
+    def reattach(self) -> None:
+        """Re-subscribe after a home-server crash dropped subscriptions."""
+        self.home_store.unsubscribe(self._on_home_change)
+        self.home_store.subscribe(self._on_home_change)
+
+    # ---- placement -------------------------------------------------------
+    def add_replica(self, name: str, store: HomeStore) -> Replica:
+        token = store.authenticate(
+            lambda ch: respond(store.keyphrase, ch))
+        rep = Replica(name=name, store=store, token=token)
+        self.replicas[name] = rep
+        return rep
+
+    # ---- read routing ----------------------------------------------------
+    def route(self, client_name: str, path: str) -> List[ReadSource]:
+        """Read sources ordered by link latency; home always present.
+
+        Ties go to home (authoritative).  The client walks the list,
+        falling back on :class:`DisconnectedError`.
+        """
+        ranked: List[Tuple[float, int, ReadSource]] = [(
+            self.network.latency_between(client_name, self.home_name), 0,
+            (self.home_name, self.home_store, self.token))]
+        for ep in self.catalog.fresh_holders(path):
+            rep = self.replicas.get(ep)
+            if rep is None or path in rep.lagging:
+                continue
+            ranked.append((self.network.latency_between(client_name, ep), 1,
+                           (ep, rep.store, rep.token)))
+        ranked.sort(key=lambda t: (t[0], t[1]))
+        return [src for _, _, src in ranked]
+
+    # ---- write-back fan-out ---------------------------------------------
+    def propagate(self, path: str, data: bytes, st: ObjectStat) -> int:
+        """Push one home-applied store to every replica (home -> replica).
+
+        A partitioned replica is recorded as lagging and skipped — fan-out
+        never blocks or fails the flusher on a WAN fault.  Returns the
+        number of replicas brought fresh.
+        """
+        ok = 0
+        for rep in self.replicas.values():
+            try:
+                self.transfer.send(self.home_name, rep.name, data)
+            except DisconnectedError:
+                rep.lagging.add(path)
+                self.catalog.drop(path, rep.name)
+                self.fanout_deferred += 1
+                continue
+            rep.store.put(rep.token, path, data, version=st.version)
+            self.catalog.record(path, rep.name, st.version)
+            rep.lagging.discard(path)
+            self.fanout_ok += 1
+            ok += 1
+        return ok
+
+    def propagate_delete(self, path: str) -> int:
+        ok = 0
+        for rep in self.replicas.values():
+            try:
+                self.network.rpc(self.home_name, rep.name, "replica_delete")
+            except DisconnectedError:
+                rep.lagging.add(path)
+                self.catalog.drop(path, rep.name)
+                self.fanout_deferred += 1
+                continue
+            try:
+                rep.store.delete(rep.token, path)
+            except FileNotFoundError:
+                pass
+            self.catalog.drop(path, rep.name)
+            rep.lagging.discard(path)
+            ok += 1
+        return ok
+
+    # ---- anti-entropy ----------------------------------------------------
+    def resync(self) -> int:
+        """Converge every replica onto the home version vector.
+
+        Pushes missing/stale objects, removes deleted ones, and refreshes
+        the catalog's home-version view (which also recovers from a home
+        crash that dropped the notification subscription).  Returns the
+        number of repair transfers performed.
+        """
+        vv = self.home_store.version_vector(self.token)
+        for path, hv in vv.items():
+            self.catalog.note_home(path, hv)
+        repaired = 0
+        for path, hv in vv.items():
+            blob = None       # home disk read shared across replicas
+            for rep in self.replicas.values():
+                held = self.catalog.version_at(path, rep.name)
+                if held is not None and held >= hv:
+                    rep.lagging.discard(path)
+                    continue
+                if blob is None:
+                    try:
+                        blob = self.home_store.get(self.token, path)
+                    except FileNotFoundError:
+                        break   # deleted since the vector snapshot
+                data, st = blob
+                try:
+                    self.transfer.send(self.home_name, rep.name, data)
+                except DisconnectedError:
+                    rep.lagging.add(path)
+                    continue
+                rep.store.put(rep.token, path, data, version=st.version)
+                self.catalog.record(path, rep.name, st.version)
+                rep.lagging.discard(path)
+                repaired += 1
+        for rep in self.replicas.values():
+            # drop objects deleted at home
+            for path in self.catalog.paths_at(rep.name):
+                if path in vv:
+                    continue
+                try:
+                    self.network.rpc(self.home_name, rep.name,
+                                     "replica_delete")
+                except DisconnectedError:
+                    rep.lagging.add(path)
+                    continue
+                try:
+                    rep.store.delete(rep.token, path)
+                except FileNotFoundError:
+                    pass
+                self.catalog.drop(path, rep.name)
+                repaired += 1
+        return repaired

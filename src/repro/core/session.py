@@ -8,10 +8,11 @@ a client whose mounts ride the authenticated token.
 from __future__ import annotations
 
 import os
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional
 
 from repro.core.namespace import XufsClient
+from repro.core.replication import ReplicaSet
 from repro.core.store import HomeStore
 from repro.core.transport import (
     AuthError, Endpoint, KeyPhrase, Network, respond,
@@ -44,13 +45,17 @@ class Session:
     server: UserFileServer
     client: XufsClient
     token: str
+    replicas: Optional[ReplicaSet] = None
 
     def remount(self, prefix: str, localized: Optional[List[str]] = None):
         token = _authenticate(self.server)
         self.token = token
+        if self.replicas is not None:
+            self.replicas.token = token
+            self.replicas.reattach()
         self.client.mount(prefix, self.server.endpoint.name,
                           self.server.store, token,
-                          localized=localized)
+                          localized=localized, replicas=self.replicas)
 
 
 def _authenticate(server: UserFileServer) -> str:
@@ -61,10 +66,15 @@ def _authenticate(server: UserFileServer) -> str:
 def ussh_login(user: str, network: Network, home_root: str,
                site_root: str, *, home_name: str = "home",
                site_name: str = "site",
-               mounts: Optional[Dict[str, List[str]]] = None) -> Session:
+               mounts: Optional[Dict[str, List[str]]] = None,
+               replica_sites: Optional[Dict[str, float]] = None) -> Session:
     """Login from the personal system into a site; mount the home space.
 
     ``mounts`` maps namespace prefix -> localized sub-prefixes.
+    ``replica_sites`` maps replica endpoint name -> one-way latency (s)
+    from the compute site; each named site gets a read replica of the
+    home space registered in the session's :class:`ReplicaSet`, and cache
+    fills route to the nearest fresh replica.
     """
     home_ep = Endpoint(home_name, network)
     Endpoint(site_name, network)
@@ -75,11 +85,24 @@ def ussh_login(user: str, network: Network, home_root: str,
     # SSH-authenticated login, then challenge-auth the data connections
     network.rpc(site_name, home_name, "ssh_login", encrypted=True)
     token = _authenticate(server)
+    replicas: Optional[ReplicaSet] = None
+    if replica_sites:
+        replicas = ReplicaSet(network=network, home_name=home_name,
+                              home_store=store, token=token)
+        for rname, latency_s in replica_sites.items():
+            rep_ep = Endpoint(rname, network)
+            network.set_link(site_name, rname,
+                             _dc_replace(network.link, latency_s=latency_s))
+            rstore = HomeStore(
+                os.path.join(home_root, ".replicas", rname, user),
+                endpoint=rep_ep)
+            replicas.add_replica(rname, rstore)
     client = XufsClient(site_name, network,
                         cache_root=os.path.join(site_root, user, "cache"),
                         oplog_root=os.path.join(site_root, user, "oplog"),
                         owner=user)
     for prefix, localized in (mounts or {"home/": []}).items():
-        client.mount(prefix, home_name, store, token, localized=localized)
+        client.mount(prefix, home_name, store, token, localized=localized,
+                     replicas=replicas)
     return Session(user=user, network=network, server=server, client=client,
-                   token=token)
+                   token=token, replicas=replicas)

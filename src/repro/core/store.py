@@ -76,13 +76,18 @@ class HomeStore:
         return os.path.join(self.root, "meta", path.lstrip("/") + ".json")
 
     # ---- object API ------------------------------------------------------
-    def put(self, token: str, path: str, data: bytes) -> ObjectStat:
+    def put(self, token: str, path: str, data: bytes,
+            version: Optional[int] = None) -> ObjectStat:
+        """Store a blob.  ``version=None`` bumps the local counter (the
+        authoritative home path); replicas pass the home version explicitly
+        so version numbers mean the same thing fabric-wide."""
         self.check(token)
         dp, mp = self._dpath(path), self._mpath(path)
         os.makedirs(os.path.dirname(dp), exist_ok=True)
         os.makedirs(os.path.dirname(mp), exist_ok=True)
         prev = self.stat_unchecked(path)
-        version = (prev.version + 1) if prev else 1
+        if version is None:
+            version = (prev.version + 1) if prev else 1
         # atomic write: temp + rename (crash-safe)
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(dp))
         with os.fdopen(fd, "wb") as f:
@@ -136,6 +141,16 @@ class HomeStore:
                 with open(os.path.join(dirpath, fn)) as f:
                     out.append(ObjectStat.from_json(json.load(f)))
         return sorted(out, key=lambda s: s.path)
+
+    def version_vector(self, token: str, prefix: str = "") -> Dict[str, int]:
+        """``path -> version`` for everything under ``prefix``.
+
+        This is the anti-entropy primitive: a replica (or the post-crash
+        sync tool) diffs its holdings against the home vector to find what
+        to pull, push, or drop.
+        """
+        self.check(token)
+        return {st.path: st.version for st in self.listdir(token, prefix)}
 
     # ---- locks / leases (paper §3.1 lease manager) -----------------------
     def acquire_lock(self, token: str, path: str, owner: str,

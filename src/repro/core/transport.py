@@ -56,7 +56,13 @@ class LinkModel:
 
 @dataclass
 class Network:
-    """Endpoint registry + virtual clock + partition schedule."""
+    """Endpoint registry + virtual clock + partition schedule.
+
+    The default ``link`` models every pair; ``set_link`` overrides a single
+    pair (e.g. a nearby replica site with a fraction of the home RTT).
+    Per-endpoint RPC/byte counters let tests and benchmarks assert *where*
+    traffic went, not just how much.
+    """
 
     link: LinkModel = field(default_factory=LinkModel)
     clock: float = 0.0
@@ -64,6 +70,9 @@ class Network:
     rpc_count: int = 0
     _partitions: Dict[Tuple[str, str], float] = field(default_factory=dict)
     _endpoints: Dict[str, "Endpoint"] = field(default_factory=dict)
+    _links: Dict[Tuple[str, str], LinkModel] = field(default_factory=dict)
+    per_endpoint_rpcs: Dict[str, int] = field(default_factory=dict)
+    per_endpoint_bytes: Dict[str, int] = field(default_factory=dict)
 
     # ---- endpoints ----------------------------------------------------
     def register(self, ep: "Endpoint") -> None:
@@ -71,6 +80,16 @@ class Network:
 
     def endpoint(self, name: str) -> "Endpoint":
         return self._endpoints[name]
+
+    # ---- per-pair links -------------------------------------------------
+    def set_link(self, a: str, b: str, link: LinkModel) -> None:
+        self._links[(min(a, b), max(a, b))] = link
+
+    def link_between(self, a: str, b: str) -> LinkModel:
+        return self._links.get((min(a, b), max(a, b)), self.link)
+
+    def latency_between(self, a: str, b: str) -> float:
+        return self.link_between(a, b).latency_s
 
     # ---- time ----------------------------------------------------------
     def advance(self, seconds: float) -> None:
@@ -100,11 +119,23 @@ class Network:
         """Account one RPC; returns the modeled elapsed seconds."""
         if self.is_partitioned(src, dst):
             raise DisconnectedError(f"{src} <-> {dst} partitioned")
-        dt = self.link.transfer_time(payload_bytes, n_streams, encrypted)
+        dt = self.link_between(src, dst).transfer_time(payload_bytes,
+                                                       n_streams, encrypted)
         self.advance(dt)
         self.bytes_sent += payload_bytes
         self.rpc_count += 1
+        self.account(src, payload_bytes)
+        self.account(dst, payload_bytes)
         return dt
+
+    def account(self, endpoint: str, payload_bytes: int = 0,
+                rpcs: int = 1) -> None:
+        """Attribute traffic to one end of a link (rpc charges both ends,
+        so ``per_endpoint_rpcs[name]`` reads as 'traffic touching name')."""
+        self.per_endpoint_rpcs[endpoint] = \
+            self.per_endpoint_rpcs.get(endpoint, 0) + rpcs
+        self.per_endpoint_bytes[endpoint] = \
+            self.per_endpoint_bytes.get(endpoint, 0) + payload_bytes
 
 
 @dataclass

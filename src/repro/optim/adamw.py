@@ -124,7 +124,11 @@ def adamw_update(grads: Params, state: Dict[str, Any], params: Params,
         if use_q8:
             g2 = g32 if g32.ndim else g32.reshape(1)
             m_f = q8_decode(m["q"], m["s"], blk)
-            v_f = q8_decode(v["q"], v["s"], blk)
+            # v codes live in the sqrt domain: a linear int8 grid on v
+            # rounds small second moments to 0 and the step m/(sqrt(v)+eps)
+            # explodes; quantizing sqrt(v) bounds the error of sqrt(v)
+            # itself, keeping the int8 trajectory on the fp32 one.
+            v_f = jnp.square(q8_decode(v["q"], v["s"], blk))
             m_new = cfg.b1 * m_f + (1 - cfg.b1) * g2
             v_new = cfg.b2 * v_f + (1 - cfg.b2) * jnp.square(g2)
         else:
@@ -140,7 +144,7 @@ def adamw_update(grads: Params, state: Dict[str, Any], params: Params,
                                                p.astype(jnp.float32)))
         if use_q8:
             mq, ms = q8_encode(m_new, blk)
-            vq, vs = q8_encode(v_new, blk)
+            vq, vs = q8_encode(jnp.sqrt(v_new), blk)
             return new_p.astype(p.dtype), {"q": mq, "s": ms}, \
                 {"q": vq, "s": vs}
         return new_p.astype(p.dtype), m_new, v_new

@@ -1,0 +1,148 @@
+"""Property-check shim: real hypothesis when installed, else a tiny
+deterministic stand-in.
+
+The tier-1 suite must collect and run on machines without ``hypothesis``
+(the container does not bake it in).  Test modules import::
+
+    from _propcheck import given, settings, strategies as st
+
+When the real package is importable those names are re-exports and behave
+exactly like hypothesis.  Otherwise the shim below provides the subset of
+the surface this suite uses — ``given`` with positional strategies (filled
+into the rightmost test parameters, hypothesis-style, so pytest fixtures on
+the left keep working), ``settings(max_examples=..., deadline=...)``, and
+the ``integers`` / ``binary`` / ``lists`` / ``tuples`` / ``sampled_from`` /
+``booleans`` / ``floats`` / ``just`` strategies — as a seeded random case
+generator.  Cases are reproducible: the seed defaults to
+:data:`DEFAULT_SEED` and can be overridden from the command line via
+``pytest --seed N`` (see ``conftest.py``).  No shrinking; a failure reports
+the drawn example and chains the original error.
+"""
+from __future__ import annotations
+
+try:                                    # real-hypothesis-first
+    from hypothesis import given, settings, strategies  # noqa: F401
+    USING_HYPOTHESIS = True
+except ImportError:
+    USING_HYPOTHESIS = False
+
+# Overridden by conftest.py when `pytest --seed N` is passed.  Only the
+# shim consumes it; real hypothesis manages its own seeding.
+GLOBAL_SEED = None
+DEFAULT_SEED = 0xA11CE
+DEFAULT_MAX_EXAMPLES = 25
+
+if not USING_HYPOTHESIS:
+    import inspect
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, name, draw):
+            self._name = name
+            self._draw = draw
+
+        def draw(self, rng):
+            return self._draw(rng)
+
+        def __repr__(self):
+            return self._name
+
+    def _integers(min_value=-(2 ** 31), max_value=2 ** 31):
+        def draw(rng):
+            # bias toward the boundaries: that is where stripe/WAL logic
+            # breaks, and where hypothesis would shrink to anyway
+            r = rng.random()
+            if r < 0.10:
+                return min_value
+            if r < 0.20:
+                return max_value
+            return rng.randint(min_value, max_value)
+        return _Strategy(f"integers({min_value}, {max_value})", draw)
+
+    def _binary(min_size=0, max_size=64):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return bytes(rng.getrandbits(8) for _ in range(n))
+        return _Strategy(f"binary({min_size}, {max_size})", draw)
+
+    def _lists(elements, min_size=0, max_size=16):
+        def draw(rng):
+            n = rng.randint(min_size, max_size)
+            return [elements.draw(rng) for _ in range(n)]
+        return _Strategy(f"lists({elements!r})", draw)
+
+    def _tuples(*elems):
+        return _Strategy(f"tuples({', '.join(map(repr, elems))})",
+                         lambda rng: tuple(e.draw(rng) for e in elems))
+
+    def _sampled_from(seq):
+        choices = list(seq)
+        return _Strategy(f"sampled_from({choices!r})",
+                         lambda rng: rng.choice(choices))
+
+    def _booleans():
+        return _Strategy("booleans()", lambda rng: rng.random() < 0.5)
+
+    def _floats(min_value=0.0, max_value=1.0, **_ignored):
+        return _Strategy(f"floats({min_value}, {max_value})",
+                         lambda rng: rng.uniform(min_value, max_value))
+
+    def _just(value):
+        return _Strategy(f"just({value!r})", lambda rng: value)
+
+    strategies = types.SimpleNamespace(
+        integers=_integers, binary=_binary, lists=_lists, tuples=_tuples,
+        sampled_from=_sampled_from, booleans=_booleans, floats=_floats,
+        just=_just,
+    )
+
+    def settings(**kw):
+        """Record run options (only ``max_examples`` is honored)."""
+        def deco(fn):
+            fn._pc_settings = kw
+            return fn
+        return deco
+
+    def given(*arg_strats, **kw_strats):
+        def deco(fn):
+            sig = inspect.signature(fn)
+            params = list(sig.parameters)
+            strat_map = dict(kw_strats)
+            if arg_strats:
+                # hypothesis fills positional strategies from the RIGHT,
+                # leaving leading parameters for pytest fixtures
+                free = [p for p in params if p not in strat_map]
+                for name, strat in zip(free[len(free) - len(arg_strats):],
+                                       arg_strats):
+                    strat_map[name] = strat
+            fixture_params = [sig.parameters[p] for p in params
+                              if p not in strat_map]
+
+            def wrapper(*a, **kw):
+                cfg = getattr(wrapper, "_pc_settings", {})
+                n = cfg.get("max_examples", DEFAULT_MAX_EXAMPLES)
+                seed = GLOBAL_SEED if GLOBAL_SEED is not None \
+                    else DEFAULT_SEED
+                rng = random.Random(
+                    f"{seed}:{fn.__module__}.{fn.__qualname__}")
+                for i in range(n):
+                    drawn = {name: s.draw(rng)
+                             for name, s in strat_map.items()}
+                    try:
+                        fn(*a, **kw, **drawn)
+                    except Exception as e:
+                        raise AssertionError(
+                            f"{fn.__name__}: falsifying example {i + 1}/{n}"
+                            f" (seed={seed}, rerun with `pytest --seed"
+                            f" {seed}`): {drawn!r}") from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__qualname__ = fn.__qualname__
+            wrapper.__doc__ = fn.__doc__
+            wrapper.__module__ = fn.__module__
+            wrapper._pc_settings = getattr(fn, "_pc_settings", {})
+            # pytest must see only the fixture parameters
+            wrapper.__signature__ = sig.replace(parameters=fixture_params)
+            return wrapper
+        return deco

@@ -3,7 +3,7 @@ import json
 import os
 
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.oplog import MetaOpQueue, PENDING, DONE
 from repro.core.transport import DisconnectedError

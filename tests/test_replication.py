@@ -1,0 +1,211 @@
+"""Replica fabric: nearest-replica reads, fan-out, fault injection.
+
+Faults exercised: a replica partitioned mid-striped-fetch (fallback to
+home), a flusher crash between the home apply and the replica fan-out
+(``replay()`` converges), and a callback-invalidated replica (never read).
+"""
+import pytest
+
+from repro.core import (
+    DisconnectedError, LinkModel, MB, Network, ussh_login,
+)
+
+HOME_LATENCY = 0.060
+
+
+def login(tmp_path, replica_sites, tag="a"):
+    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
+    return ussh_login("sci", net, str(tmp_path / f"home-{tag}"),
+                      str(tmp_path / f"site-{tag}"),
+                      replica_sites=replica_sites)
+
+
+@pytest.fixture()
+def rsession(tmp_path):
+    """Two replicas: r1 is nearest, then r2; home is farthest."""
+    return login(tmp_path, {"r1": 0.005, "r2": 0.015})
+
+
+def seed_and_sync(s, path="home/data/a.bin", payload=b"A" * (1 * MB)):
+    s.server.store.put(s.token, path, payload)
+    s.replicas.resync()
+    return path, payload
+
+
+# ---- nearest-replica reads -------------------------------------------------
+
+def test_cold_read_fills_from_nearest_replica(rsession):
+    s = rsession
+    path, payload = seed_and_sync(s)
+    with s.client.open(path) as f:
+        assert f.read() == payload
+    assert s.client.cache.fills_from == {"r1": 1}       # nearest, not home
+
+
+def test_replica_read_is_faster_than_home_baseline(tmp_path):
+    base = login(tmp_path, None, tag="base")
+    rep = login(tmp_path, {"r1": 0.005}, tag="rep")
+    payload = b"B" * (4 * MB)
+    for s in (base, rep):
+        s.server.store.put(s.token, "home/d/x.bin", payload)
+    rep.replicas.resync()
+    times = {}
+    for name, s in (("base", base), ("rep", rep)):
+        t0 = s.client.network.clock
+        with s.client.open("home/d/x.bin") as f:
+            assert f.read() == payload
+        times[name] = s.client.network.clock - t0
+    assert times["rep"] < times["base"]
+
+
+def test_cold_read_survives_home_partition_via_replica(rsession):
+    """The multi-site headline: home down, a fresh replica still serves."""
+    s = rsession
+    path, payload = seed_and_sync(s)
+    s.client.network.partition("site", "home")
+    with s.client.open(path) as f:                      # never cached before
+        assert f.read() == payload
+    assert s.client.cache.fills_from == {"r1": 1}
+
+
+def test_prefetch_waves_route_to_replica(rsession):
+    s = rsession
+    for i in range(8):
+        s.server.store.put(s.token, f"home/src/s{i}.c", b"c" * 1000)
+    s.replicas.resync()
+    assert s.client.chdir("home/src") == 8
+    assert s.client.cache.fills_from.get("r1") == 8
+    assert s.client.network.per_endpoint_rpcs.get("r1", 0) >= 8
+
+
+# ---- fault: partition mid-striped-fetch ------------------------------------
+
+def test_partition_mid_striped_fetch_falls_back_to_home(tmp_path):
+    s = login(tmp_path, {"r1": 0.005})
+    path, payload = seed_and_sync(s, payload=b"S" * (2 * MB))  # striped size
+    rep = s.replicas.replicas["r1"]
+    orig_get = rep.store.get
+
+    def get_then_die(token, p):
+        out = orig_get(token, p)
+        # the link drops after the replica starts serving, while the
+        # striped transfer is still in flight
+        s.client.network.partition("site", "r1")
+        return out
+
+    rep.store.get = get_then_die
+    try:
+        with s.client.open(path) as f:
+            assert f.read() == payload                  # degraded, not error
+    finally:
+        rep.store.get = orig_get
+    assert s.client.cache.fills_from == {"home": 1}
+    # entry is fully valid despite the mid-fetch fault
+    assert s.client.cache.lookup(path).state == "valid"
+
+
+def test_all_sources_partitioned_raises_disconnected(tmp_path):
+    s = login(tmp_path, {"r1": 0.005})
+    path, _ = seed_and_sync(s)
+    s.client.network.partition("site", "r1")
+    s.client.network.partition("site", "home")
+    with pytest.raises(DisconnectedError):
+        s.client.open(path)
+
+
+# ---- fault: flusher crash between home apply and fan-out -------------------
+
+def test_flusher_crash_then_replay_converges_replicas(rsession):
+    s = rsession
+    payload = b"W" * 300_000
+    with s.client.open("home/out/r.dat", "w") as f:
+        f.write(payload)
+
+    real_propagate = s.replicas.propagate
+
+    def crash(path, data, st):
+        raise RuntimeError("flusher crashed after home apply")
+
+    s.replicas.propagate = crash
+    with pytest.raises(RuntimeError):
+        s.client.pump()
+    s.replicas.propagate = real_propagate
+
+    # home applied, replicas did not, record still pending (not marked done)
+    assert s.server.store.get(s.token, "home/out/r.dat")[0] == payload
+    for rep in s.replicas.replicas.values():
+        with pytest.raises(FileNotFoundError):
+            rep.store.get(rep.token, "home/out/r.dat")
+    assert [r.path for r in s.client.oplog.pending()] == ["home/out/r.dat"]
+
+    assert s.client.replay() == 1
+    assert s.client.oplog.pending() == []
+    home_v = s.server.store.stat(s.token, "home/out/r.dat").version
+    for name, rep in s.replicas.replicas.items():
+        data, st = rep.store.get(rep.token, "home/out/r.dat")
+        assert data == payload
+        assert st.version == home_v                      # converged versions
+        assert name in s.replicas.catalog.fresh_holders("home/out/r.dat")
+
+
+def test_partitioned_replica_never_blocks_flush_and_resyncs(rsession):
+    s = rsession
+    with s.client.open("home/out/lag.dat", "w") as f:
+        f.write(b"L" * 200_000)
+    s.client.network.partition("home", "r1")
+    assert s.client.pump() == 1                          # flush not blocked
+    assert s.server.store.get(s.token, "home/out/lag.dat")[0] \
+        == b"L" * 200_000
+    # r2 fresh, r1 lagging and out of the read path
+    assert s.replicas.catalog.fresh_holders("home/out/lag.dat") == ["r2"]
+    assert "home/out/lag.dat" in s.replicas.replicas["r1"].lagging
+    s.client.network.heal("home", "r1")
+    s.replicas.resync()
+    assert sorted(s.replicas.catalog.fresh_holders("home/out/lag.dat")) \
+        == ["r1", "r2"]
+
+
+# ---- fault: stale (callback-invalidated) replica ---------------------------
+
+def test_invalidated_replica_is_never_read(rsession):
+    s = rsession
+    path, _ = seed_and_sync(s, payload=b"v1" * 1000)
+    with s.client.open(path) as f:                       # fill from r1
+        f.read()
+    # home changes directly; replicas still hold v1
+    s.server.store.put(s.token, path, b"v2-new" * 1000)
+    assert s.client.pump_callbacks() >= 1
+    assert s.client.cache.lookup(path).state == "invalid"
+    assert s.replicas.catalog.fresh_holders(path) == []  # all replicas stale
+    with s.client.open(path) as f:
+        assert f.read() == b"v2-new" * 1000              # re-fetched fresh
+    assert s.client.cache.fills_from.get("home") == 1    # served by home
+    assert s.client.cache.fills_from.get("r1") == 1      # only the v1 fill
+
+
+def test_deleted_at_home_drops_replicas_from_read_path(rsession):
+    s = rsession
+    path, _ = seed_and_sync(s)
+    s.server.store.delete(s.token, path)
+    assert s.replicas.catalog.fresh_holders(path) == []
+    with pytest.raises(FileNotFoundError):
+        s.client._fetch(s.client._mount_for(path), path)
+
+
+# ---- write fan-out end-to-end ---------------------------------------------
+
+def test_write_back_fan_out_reaches_all_replicas(rsession):
+    s = rsession
+    with s.client.open("home/out/fan.dat", "w") as f:
+        f.write(b"F" * 150_000)
+    assert s.client.pump() == 1
+    for rep in s.replicas.replicas.values():
+        assert rep.store.get(rep.token, "home/out/fan.dat")[0] \
+            == b"F" * 150_000
+    # a later cold read on a fresh client cache hits the nearest replica
+    import os
+    os.remove(s.client.cache.data_path("home/out/fan.dat"))
+    os.remove(s.client.cache.attr_path("home/out/fan.dat"))
+    with s.client.open("home/out/fan.dat") as f:
+        assert f.read() == b"F" * 150_000
+    assert s.client.cache.fills_from.get("r1") == 1

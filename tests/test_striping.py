@@ -1,6 +1,6 @@
 """Striped-transfer engine: plan properties + byte-exact reassembly."""
 import pytest
-from hypothesis import given, settings, strategies as st
+from _propcheck import given, settings, strategies as st
 
 from repro.core.striping import (
     plan_stripes, reassemble, StripedTransfer, STRIPE_THRESHOLD, MIN_BLOCK,
@@ -43,6 +43,28 @@ def test_reassemble_roundtrip(payload):
     plan = plan_stripes(len(payload))
     parts = [payload[o:o + l] for o, l in plan.stripes]
     assert reassemble(plan, parts) == payload
+
+
+@given(st.integers(min_value=0, max_value=512 * 1024 * 1024),
+       st.integers(min_value=1, max_value=MAX_STRIPES))
+@settings(max_examples=200, deadline=None)
+def test_plan_invariants_under_any_stripe_budget(nbytes, max_stripes):
+    """plan_stripes invariants for every (size, stripe budget):
+    stripes cover [0, total) exactly once with no overlap, every block is
+    >= MIN_BLOCK except possibly the tail, and n_streams <= budget."""
+    plan = plan_stripes(nbytes, max_stripes=max_stripes)
+    assert plan.total == nbytes
+    assert plan.n_streams <= max(max_stripes, 1) <= MAX_STRIPES
+    expect_off = 0
+    for off, ln in plan.stripes:
+        assert off == expect_off           # contiguous => no gap/overlap
+        expect_off = off + ln
+    assert expect_off == nbytes            # covers [0, total) exactly once
+    for off, ln in plan.stripes[:-1]:
+        assert ln >= MIN_BLOCK or nbytes <= STRIPE_THRESHOLD
+    if nbytes > STRIPE_THRESHOLD and plan.stripes:
+        _, tail = plan.stripes[-1]
+        assert tail > 0
 
 
 def test_striping_speedup_on_fat_link():
