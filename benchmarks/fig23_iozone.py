@@ -13,15 +13,16 @@ from benchmarks.common import emit, timed
 
 MB = 1024 * 1024
 SIZES = [1 * MB, 16 * MB, 64 * MB, 256 * MB, 1024 * MB]
+SMOKE_SIZES = [1 * MB, 4 * MB]
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     from repro.core import Network, ussh_login
 
     with tempfile.TemporaryDirectory() as td:
         net = Network()
         s = ussh_login("bench", net, td + "/h", td + "/s")
-        for size in SIZES:
+        for size in (SMOKE_SIZES if smoke else SIZES):
             label = f"{size // MB}M"
             payload = b"\x5a" * size
 

@@ -40,16 +40,17 @@ def _build_pass(s, net):
     return net.clock - c0
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     from repro.core import Network, ussh_login
     from repro.core import prefetch as pf_mod
 
+    n_runs = 2 if smoke else 5    # run 1 cold, the rest warm cache hits
     # ---- with parallel prefetch (XUFS default) --------------------------
     with tempfile.TemporaryDirectory() as td:
         net = Network()
         s = ussh_login("bench", net, td + "/h", td + "/s")
         _populate(s)
-        for run_i in range(1, 6):
+        for run_i in range(1, n_runs + 1):
             us, wan_s = timed(lambda: _build_pass(s, net))
             emit(f"fig4/build_run{run_i}_wan_s", us, round(wan_s, 4))
         s.client.sync()

@@ -13,25 +13,27 @@ from benchmarks.common import emit, timed
 
 GB = 1024 * 1024 * 1024
 SIZE = 1 * GB
+SMOKE_SIZE = 8 * 1024 * 1024      # striped path still exercised
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     from repro.core import Network, ussh_login
 
+    size = SMOKE_SIZE if smoke else SIZE
     with tempfile.TemporaryDirectory() as td:
         net = Network()
         s = ussh_login("bench", net, td + "/h", td + "/s")
-        payload = b"line\n" * (SIZE // 5)
+        payload = b"line\n" * (size // 5)
         s.server.store.put(s.token, "home/data/big.dat", payload)
 
         # ---- fig5: five consecutive "wc -l" runs in XUFS -----------------
-        for run_i in range(1, 6):
+        for run_i in range(1, 3 if smoke else 6):
             def wc_run():
                 c0 = net.clock
                 with s.client.open("home/data/big.dat") as f:
                     data = f.read()
                 n = data.count(b"\n")
-                assert n == SIZE // 5
+                assert n == size // 5
                 return net.clock - c0
 
             us, wan_s = timed(wc_run)

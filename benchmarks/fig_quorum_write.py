@@ -1,0 +1,165 @@
+"""Quorum write-ack: latency vs. availability under a home outage.
+
+A client site writes behind a 60 ms home link with two replica sites
+(5/15 ms).  Three write-ack policies are swept over the same workload:
+
+  W=1        the legacy policy — the home apply alone acks, replica
+             fan-out is best-effort;
+  majority   W = N//2+1 of home+replicas;
+  all        W = N.
+
+Rows report modeled WAN seconds / fractions:
+
+  quorum_write/ack_latency_<policy>_s          healthy-network mean time
+                                               from apply start to W-th ack
+  quorum_write/home_outage_<policy>_acked_frac fraction of writes that
+                                               became client-complete with
+                                               home fully partitioned
+  quorum_write/outage_majority_fresh_read_frac cold reads served fresh
+                                               from acked replicas during
+                                               the outage
+  quorum_write/post_heal_<policy>_home_converged_frac
+                                               writes that reached home
+                                               after the heal
+
+Run standalone, the script exits non-zero unless: ack latency strictly
+orders W=1 < majority < all; majority keeps acking (and reads stay
+fresh) through the outage while W=1 and W=all stall; and every policy
+converges home after the heal — the acceptance gate for quorum writes.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, timed
+
+HOME_LATENCY = 0.060
+REPLICA_SITES = {"r1": 0.005, "r2": 0.015}
+HOME_PAIRS = (("site", "home"), ("home", "r1"), ("home", "r2"))
+POLICIES = (("w1", 1), ("majority", "majority"), ("all", "all"))
+
+
+def _login(policy, root: str, tag: str):
+    from repro.core import LinkModel, Network, ussh_login
+
+    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
+    return ussh_login("bench", net, f"{root}/home-{tag}", f"{root}/site-{tag}",
+                      replica_sites=dict(REPLICA_SITES), write_quorum=policy)
+
+
+def _write_files(s, n_files: int, size: int, prefix: str) -> list:
+    paths = []
+    for i in range(n_files):
+        p = f"home/out/{prefix}{i}.dat"
+        with s.client.open(p, "w") as f:
+            f.write(bytes([i % 251]) * size)
+        paths.append(p)
+    return paths
+
+
+def _evict(s, path: str) -> None:
+    for fp in (s.client.cache.data_path(path), s.client.cache.attr_path(path)):
+        if os.path.exists(fp):
+            os.remove(fp)
+
+
+def run(smoke: bool = False) -> int:
+    from repro.core import MB
+
+    n_files = 2 if smoke else 6
+    size = 64 * 1024 if smoke else MB // 2
+    root = tempfile.mkdtemp(prefix="fig_quorum_write_")
+    failures = []
+    try:
+        # ---- healthy network: time-to-W-th-ack per policy ----------------
+        ack = {}
+        for name, policy in POLICIES:
+            s = _login(policy, root, f"lat-{name}")
+            _write_files(s, n_files, size, "lat")
+
+            def drain(s=s):
+                s.client.sync()
+                lats = list(s.client.ack_wan_s.values())
+                return sum(lats) / len(lats)
+
+            us, mean_s = timed(drain)
+            ack[name] = mean_s
+            emit(f"quorum_write/ack_latency_{name}_s", us, f"{mean_s:.4f}")
+        if not ack["w1"] < ack["majority"] < ack["all"]:
+            failures.append(
+                f"ack latency not ordered w1<majority<all: {ack}")
+
+        # ---- home outage: who keeps acking? ------------------------------
+        healed = {}
+        for name, policy in POLICIES:
+            s = _login(policy, root, f"out-{name}")
+            healed[name] = s
+            for pair in HOME_PAIRS:
+                s.client.network.partition(*pair)
+            paths = _write_files(s, n_files, size, "out")
+
+            us, acked = timed(lambda s=s: float(s.client.sync()) / n_files)
+            emit(f"quorum_write/home_outage_{name}_acked_frac", us,
+                 f"{acked:.2f}")
+            want = 1.0 if name == "majority" else 0.0
+            if acked != want:
+                failures.append(
+                    f"{name}: acked_frac {acked} during outage, want {want}")
+
+            if name == "majority":
+                # reads stay fresh: cold fills come from acked replicas
+                fresh = 0
+                for i, p in enumerate(paths):
+                    _evict(s, p)
+                    with s.client.open(p) as f:
+                        fresh += int(f.read() == bytes([i % 251]) * size)
+                us2 = 0.0
+                emit("quorum_write/outage_majority_fresh_read_frac", us2,
+                     f"{fresh / n_files:.2f}")
+                if fresh != n_files:
+                    failures.append(
+                        f"majority: {fresh}/{n_files} fresh reads in outage")
+                if s.client.cache.fills_from.get("home"):
+                    failures.append("majority: outage reads touched home")
+
+        # ---- heal: every policy must converge home -----------------------
+        for name, _ in POLICIES:
+            s = healed[name]
+            for pair in HOME_PAIRS:
+                s.client.network.heal(*pair)
+            s.client.reconnect()         # reattach + reconcile parked ops
+            s.client.sync()              # drain any stalled backlog
+            ok = 0
+            for i in range(n_files):
+                p = f"home/out/out{i}.dat"
+                try:
+                    data, _st = s.server.store.get(s.token, p)
+                except FileNotFoundError:
+                    continue
+                ok += int(data == bytes([i % 251]) * size)
+            emit(f"quorum_write/post_heal_{name}_home_converged_frac", 0.0,
+                 f"{ok / n_files:.2f}")
+            if ok != n_files:
+                failures.append(
+                    f"{name}: only {ok}/{n_files} writes reached home "
+                    "after heal")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)   # keep stdout valid CSV
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    rc = run(smoke="--smoke" in sys.argv)
+    if rc == 0:
+        print("quorum_write: OK (majority survives the home outage; "
+              "W=1 stalls; heal converges home)")
+    raise SystemExit(rc)

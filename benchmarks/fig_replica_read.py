@@ -51,20 +51,21 @@ def _cold_sweep(s, file_size: int) -> float:
     return s.client.network.clock - t0
 
 
-def run() -> int:
+def run(smoke: bool = False) -> int:
     from repro.core import MB
 
-    file_size = 4 * MB
+    file_size = 1 * MB if smoke else 4 * MB
+    counts = (0, 1, 2) if smoke else REPLICA_COUNTS
     root = tempfile.mkdtemp(prefix="fig_replica_read_")
     failures = []
     try:
         modeled = {}
-        for n in REPLICA_COUNTS:
+        for n in counts:
             s = _build_session(n, root, f"n{n}", file_size)
             us, dt = timed(lambda s=s: _cold_sweep(s, file_size))
             modeled[n] = dt
             emit(f"replica_read/cold_replicas={n}_s", us, f"{dt:.4f}")
-        for n in REPLICA_COUNTS[1:]:
+        for n in counts[1:]:
             if not modeled[n] < modeled[0]:
                 failures.append(
                     f"{n} replicas ({modeled[n]:.4f}s) not faster than "
@@ -95,7 +96,7 @@ def run() -> int:
 
 
 if __name__ == "__main__":
-    rc = run()
+    rc = run(smoke="--smoke" in sys.argv)
     if rc == 0:
         print("replica_read: OK (replicas beat home; partitions degrade, "
               "never error)")

@@ -25,7 +25,8 @@ def load_artifacts():
     return arts
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
+    # smoke-compatible as-is: reads precomputed artifacts, no heavy work
     arts = load_artifacts()
     if not arts:
         emit("roofline/no_artifacts_found", 0.0, 0)

@@ -12,17 +12,19 @@ import tempfile
 from benchmarks.common import emit, timed
 
 N_USERS = 32
+SMOKE_USERS = 6                   # census check is O(n^2)
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     from repro.core import Network, ussh_login, AuthError
 
+    n_users = SMOKE_USERS if smoke else N_USERS
     with tempfile.TemporaryDirectory() as td:
         net = Network()
         sessions = []
 
         def make_users():
-            for i in range(N_USERS):
+            for i in range(n_users):
                 s = ussh_login(f"user{i}", net, f"{td}/h{i}", f"{td}/s{i}",
                                home_name=f"home{i}", site_name=f"site{i}")
                 s.server.store.put(s.token, f"home/private_{i}.dat",

@@ -30,14 +30,15 @@ BUCKETS = [(500 << 20, ">500M"), (400 << 20, ">400M"), (300 << 20, ">300M"),
            (512 << 10, ">0.5M"), (256 << 10, ">0.25M")]
 
 
-def run() -> None:
+def run(smoke: bool = False) -> None:
     from repro.configs import ARCH_IDS
     from repro.core.striping import STRIPE_THRESHOLD
 
+    archs = ARCH_IDS[:2] if smoke else ARCH_IDS   # smoke: 2-arch census
     all_sizes = []
 
     def census():
-        for arch in ARCH_IDS:
+        for arch in archs:
             all_sizes.extend(leaf_sizes_for_arch(arch))
         return len(all_sizes)
 

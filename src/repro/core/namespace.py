@@ -29,7 +29,9 @@ from repro.core.oplog import MetaOpQueue, OpRecord
 from repro.core.replication import ReadSource, ReplicaSet
 from repro.core.store import HomeStore, ObjectStat
 from repro.core.striping import StripedTransfer
-from repro.core.transport import DisconnectedError, Network
+from repro.core.transport import (
+    DisconnectedError, Network, QuorumNotReachedError,
+)
 
 
 @dataclass
@@ -110,6 +112,16 @@ class XufsClient:
         self.leases: Dict[str, LeaseManager] = {}
         self.owner = owner
         self.cwd = ""
+        #: op seq -> modeled WAN seconds from apply start to the W-th ack
+        #: (most recent ACK_WINDOW ops; insertion order = seq order)
+        self.ack_wan_s: Dict[int, float] = {}
+
+    ACK_WINDOW = 1024
+
+    def _note_ack(self, seq: int, wan_s: float) -> None:
+        self.ack_wan_s[seq] = wan_s
+        while len(self.ack_wan_s) > self.ACK_WINDOW:
+            self.ack_wan_s.pop(next(iter(self.ack_wan_s)))
 
     # ---- mounts -----------------------------------------------------------
     def mount(self, prefix: str, server_name: str, store: HomeStore,
@@ -249,52 +261,150 @@ class XufsClient:
         return pf.prefetch_small(path, stats)
 
     # ---- write-behind sync ---------------------------------------------------
-    def _apply_record(self, rec: OpRecord, data: Optional[bytes]) -> None:
-        """Apply one queued op: home first (authoritative), then fan out.
+    def _apply_record(self, rec: OpRecord, data: Optional[bytes]) -> bool:
+        """Apply one queued op across the write group (W-of-N ack policy).
 
-        The replica fan-out runs after the home apply and absorbs WAN
-        faults internally, so a lagging or partitioned replica never
-        blocks the flusher; a crash between the home apply and the fan-out
-        leaves the record pending, and ``replay()`` re-converges.
+        Returns True when the authoritative home acknowledged (the record
+        may retire to ``done``) and False when a quorum acked around a
+        partitioned home (the record parks at ``quorum`` until
+        ``reconcile()``).  Raises :class:`QuorumNotReachedError` when
+        fewer than W endpoints confirmed — the drain stops with the
+        partial acks persisted.
         """
         m = self._mount_for(rec.path)
         if rec.op == "store":
             assert data is not None
-            self.transfer.send(self.name, m.server_name, data)
-            st = m.store.put(m.token, rec.path, data)
-            cur = self.cache.lookup(rec.path)
-            if cur is not None and cur.state == DIRTY:
-                self.cache.write_entry(CacheEntry(
-                    path=rec.path, state=VALID, stat=st))
-            if m.replicas is not None:
-                m.replicas.propagate(rec.path, data, st)
-        elif rec.op == "delete":
-            self.network.rpc(self.name, m.server_name, "delete")
+            return self._apply_store(m, rec, data)
+        if rec.op == "delete":
+            return self._apply_delete(m, rec)
+        return True
+
+    def _apply_store(self, m: Mount, rec: OpRecord, data: bytes) -> bool:
+        """One store across home + replicas, resuming from persisted acks.
+
+        Home is always attempted first (authoritative, and it assigns the
+        version); every surviving endpoint's ack is persisted in the oplog
+        *before* the next endpoint is tried, so a flusher crash after W-1
+        acks resumes with those acks in hand.  When home is unreachable
+        the flusher pins a client-assigned version and pushes directly to
+        replicas nearest-first until W acks are in.
+        """
+        reps = m.replicas
+        home = m.server_name
+        acked = set(rec.acked)
+        home_acked = home in acked
+        version = rec.version
+        t0 = self.network.clock
+        if not home_acked:
             try:
-                m.store.delete(m.token, rec.path)
-            except FileNotFoundError:
-                pass
-            if m.replicas is not None:
-                m.replicas.propagate_delete(rec.path)
+                self.transfer.send(self.name, home, data)
+                if version is None:
+                    st = m.store.put(m.token, rec.path, data)
+                else:                # replay/reconcile: idempotent re-apply
+                    st = m.store.apply_versioned(m.token, rec.path, data,
+                                                 version)
+                    if st.version > version:
+                        # Home is past our pinned version without having
+                        # seen these bytes (the catalog under-counted when
+                        # the quorum was assembled): the quorum ack
+                        # promised durability of THIS write, so it lands
+                        # on top.  (Two clients racing the same path in
+                        # one outage remain out of scope — ROADMAP.)
+                        st = m.store.put(m.token, rec.path, data,
+                                         version=st.version + 1)
+                version = st.version
+                self.oplog.mark_acked(rec, home, version=version, home=True)
+                acked.add(home)
+                home_acked = True
+                cur = self.cache.lookup(rec.path)
+                if cur is not None and cur.state == DIRTY:
+                    self.cache.write_entry(CacheEntry(
+                        path=rec.path, state=VALID, stat=st))
+            except DisconnectedError:
+                pass     # home partitioned: try to assemble a replica quorum
+        if reps is None:
+            if not home_acked:
+                raise DisconnectedError(f"{home} unreachable (no replicas)")
+            self._note_ack(rec.seq, self.network.clock - t0)
+            return True
+        w = reps.resolve_w()
+        if w <= 1 and not home_acked:
+            # W=1 is the legacy policy: the home apply IS the ack; replica
+            # fan-out stays best-effort, so a home outage stalls the drain.
+            raise DisconnectedError(f"{home} unreachable (W=1 acks at home)")
+        if version is None:
+            version = reps.next_version(rec.path)
+        quorum_clock: Optional[float] = None
+        if len(acked) >= w:
+            quorum_clock = self.network.clock
+        # home forwards when it has the bytes (third-party transfer);
+        # otherwise the client pushes directly — order by the links the
+        # applies will actually ride
+        src = reps.home_name if home_acked else self.name
+        for name in reps.replicas_by_latency(src):
+            if name in acked:
+                continue
+            if reps.apply_to_replica(name, rec.path, data, version, src=src):
+                self.oplog.mark_acked(rec, name, version=version)
+                acked.add(name)
+                if len(acked) >= w and quorum_clock is None:
+                    quorum_clock = self.network.clock
+        if len(acked) < w:
+            raise QuorumNotReachedError(
+                f"{rec.path}: {len(acked)}/{w} acks "
+                f"(N={reps.n_endpoints})")
+        self._note_ack(rec.seq, quorum_clock - t0)
+        if not home_acked:
+            reps.catalog.note_quorum(rec.path, version)
+            return False
+        return True
+
+    def _apply_delete(self, m: Mount, rec: OpRecord) -> bool:
+        """Deletes stay home-first: the authoritative tombstone must land
+        at home before replicas drop their copies (fan-out best-effort)."""
+        self.network.rpc(self.name, m.server_name, "delete")
+        try:
+            m.store.delete(m.token, rec.path)
+        except FileNotFoundError:
+            pass
+        self.oplog.retire_superseded(rec.path, rec.seq)
+        if m.replicas is not None:
+            m.replicas.propagate_delete(rec.path)
+            m.replicas.catalog.quorum_versions.pop(rec.path, None)
+        return True
 
     def pump(self, max_ops: Optional[int] = None) -> int:
-        """Drain the meta-op queue to home (the background flusher tick)."""
+        """Drain the meta-op queue (the background flusher tick).
+
+        Returns the number of ops that became client-complete: home-acked
+        and retired, or quorum-acked around a partitioned home.
+        """
         return self.oplog.flush(self._apply_record, max_ops=max_ops)
+
+    def reconcile(self) -> int:
+        """Land the home apply for quorum-parked ops once home heals."""
+        return self.oplog.reconcile(self._apply_record)
 
     def replay(self) -> int:
         """Post-crash sync: re-drain pending ops, then repair replicas.
 
-        Records are marked done only after both the home apply and the
-        fan-out complete, so a flusher crash in between replays the whole
-        record; the trailing ``resync`` converges replicas that were
-        partitioned during fan-out or missed notifications.
+        Per-endpoint acks are persisted as they arrive, so a flusher
+        crash mid-quorum resumes from the recorded ack set instead of
+        re-earning it; ``reconcile()`` then retires quorum-parked ops
+        whose home heal landed, and the trailing ``resync`` converges
+        replicas that were partitioned during fan-out or missed
+        notifications.
         """
         n = self.oplog.replay(self._apply_record)
+        self.reconcile()
+        # paths still awaiting home reconciliation are off-limits to
+        # anti-entropy: home's copy is older than the acked quorum write
+        parked = {r.path for r in self.oplog.unreconciled()}
         seen = set()      # mounts may share one ReplicaSet: resync it once
         for m in self.mounts.values():
             if m.replicas is not None and id(m.replicas) not in seen:
                 seen.add(id(m.replicas))
-                m.replicas.resync()
+                m.replicas.resync(skip=parked)
         return n
 
     def sync(self) -> int:
@@ -313,11 +423,31 @@ class XufsClient:
         return sum(nm.pump() for nm in self.notifiers.values())
 
     def reconnect(self) -> int:
-        """After a server crash/partition heals: re-register + revalidate."""
+        """After a server crash/partition heals: re-learn and re-register.
+
+        Guarantees on return: every mount's replica fabric is reattached
+        (catalog feed re-subscribed, home version vector re-learned when
+        reachable), quorum-parked writes were offered to home for
+        reconciliation, and the callback channel is re-registered with
+        every cached entry revalidated by version.  A home that is
+        *still* down does not fail the call — the client stays in
+        disconnected operation against the surviving quorum and keeps
+        flushing through ``pump()``.
+        """
         stale = 0
+        parked = {r.path for r in self.oplog.unreconciled()}
+        seen = set()
         for prefix, nm in self.notifiers.items():
             m = self.mounts[prefix]
-            stale += nm.reconnect(m.token)
+            if m.replicas is not None and id(m.replicas) not in seen:
+                seen.add(id(m.replicas))
+                m.replicas.reattach(token=m.token, via=self.name,
+                                    skip=parked)
+            try:
+                stale += nm.reconnect(m.token)
+            except DisconnectedError:
+                continue             # home still down: stay disconnected
+        self.reconcile()
         return stale
 
     # ---- locks -------------------------------------------------------------

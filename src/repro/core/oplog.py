@@ -1,22 +1,43 @@
 """Persisted meta-operation queue (paper §3.1): the write-behind WAL.
 
 Every mutating operation appends a record and returns — nothing blocks on
-the WAN.  A flusher drains the queue in order to the home store; records
-are marked done only after the remote op succeeds, so a crash at any point
-replays safely (operations are idempotent: puts overwrite, deletes are
-tolerant).  ``replay()`` is the paper's post-crash sync tool.
+the WAN.  A flusher drains the queue in order to the write group (home +
+replicas); per-endpoint acknowledgements are persisted as they arrive, so
+a flusher crash mid-quorum resumes exactly where it left off.  A record
+moves through four states:
+
+  ``pending``       appended, no endpoint has confirmed the apply;
+  ``applied@home``  the authoritative home confirmed, but fewer than W of
+                    the N write endpoints have — the flusher keeps pushing;
+  ``quorum``        at least W endpoints confirmed but home is NOT among
+                    them (home was partitioned): the op is client-complete
+                    — the client's ``sync()`` no longer waits on it — yet
+                    the record (and its shadow payload) is retained until
+                    ``reconcile()`` lands the apply at home;
+  ``done``          home confirmed and the quorum was met: the record is
+                    retired and its shadow file dropped.  Replicas beyond
+                    the quorum converge via anti-entropy, not the WAL.
+
+``replay()`` is the paper's post-crash sync tool; ``reconcile()`` is the
+quorum-era addition that re-drives home applies for quorum-acked ops once
+the home partition heals.
 """
 from __future__ import annotations
 
 import json
 import os
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional
 
 from repro.core.transport import DisconnectedError
 
 PENDING = "pending"
+APPLIED_HOME = "applied@home"
+QUORUM = "quorum"
 DONE = "done"
+
+#: Statuses the flusher still has to push (the op is not client-complete).
+FLUSHABLE = (PENDING, APPLIED_HOME)
 
 
 @dataclass
@@ -26,10 +47,13 @@ class OpRecord:
     path: str
     payload_file: Optional[str] = None   # shadow-file holding the data
     status: str = PENDING
+    acked: List[str] = field(default_factory=list)  # endpoints that confirmed
+    version: Optional[int] = None        # version pinned at first apply
 
     def to_json(self) -> Dict:
         return {"seq": self.seq, "op": self.op, "path": self.path,
-                "payload_file": self.payload_file, "status": self.status}
+                "payload_file": self.payload_file, "status": self.status,
+                "acked": self.acked, "version": self.version}
 
     @classmethod
     def from_json(cls, d: Dict) -> "OpRecord":
@@ -77,12 +101,38 @@ class MetaOpQueue:
         self._lines_written += 1
         return rec
 
-    def mark_done(self, rec: OpRecord) -> None:
-        rec.status = DONE
+    def _persist(self, rec: OpRecord) -> None:
         with open(self.wal_path, "a") as f:
             f.write(json.dumps(rec.to_json()) + "\n")
             f.flush()
         self._lines_written += 1
+
+    # ---- ack bookkeeping -------------------------------------------------
+    def mark_acked(self, rec: OpRecord, endpoint: str,
+                   version: Optional[int] = None,
+                   home: bool = False) -> None:
+        """Persist one endpoint's apply confirmation.
+
+        Written to the WAL *before* the flusher moves to the next
+        endpoint, so a crash after W-1 acks resumes with those acks in
+        hand instead of re-earning them.
+        """
+        if endpoint not in rec.acked:
+            rec.acked.append(endpoint)
+        if version is not None:
+            rec.version = version
+        if home and rec.status == PENDING:
+            rec.status = APPLIED_HOME
+        self._persist(rec)
+
+    def mark_quorum(self, rec: OpRecord) -> None:
+        """W acks reached without home: client-complete, home outstanding."""
+        rec.status = QUORUM
+        self._persist(rec)
+
+    def mark_done(self, rec: OpRecord) -> None:
+        rec.status = DONE
+        self._persist(rec)
         if rec.payload_file and os.path.exists(rec.payload_file):
             os.remove(rec.payload_file)
         if (self._lines_written >= self.compact_threshold
@@ -109,7 +159,7 @@ class MetaOpQueue:
 
     def pending(self) -> List[OpRecord]:
         # last-close-wins: only the newest pending store per path is shipped
-        recs = [r for r in self.scan() if r.status == PENDING]
+        recs = [r for r in self.scan() if r.status in FLUSHABLE]
         newest: Dict[str, int] = {}
         for r in recs:
             if r.op == "store":
@@ -123,47 +173,109 @@ class MetaOpQueue:
             out.append(r)
         return out
 
-    def flush(self, apply_fn: Callable[[OpRecord, Optional[bytes]], None],
-              max_ops: Optional[int] = None) -> int:
-        """Drain pending ops through ``apply_fn`` (raises stop the drain).
+    def unreconciled(self) -> List[OpRecord]:
+        """Quorum-acked ops whose authoritative home apply is outstanding."""
+        return [r for r in self.scan() if r.status == QUORUM]
 
-        Returns the number of ops successfully applied.
+    def retire_superseded(self, path: str, before_seq: int) -> int:
+        """Retire quorum-parked stores of ``path`` older than an op that
+        just completed — reconciling such a store later would resurrect
+        deleted/overwritten data (last-close-wins applies to parked
+        records too)."""
+        n = 0
+        for rec in self.unreconciled():
+            if rec.path == path and rec.seq < before_seq:
+                self.mark_done(rec)
+                n += 1
+        return n
+
+    def _read_payload(self, rec: OpRecord) -> Optional[bytes]:
+        if not rec.payload_file:
+            return None
+        if not os.path.exists(rec.payload_file):
+            return None
+        with open(rec.payload_file, "rb") as f:
+            return f.read()
+
+    def flush(self, apply_fn: Callable[[OpRecord, Optional[bytes]], Optional[bool]],
+              max_ops: Optional[int] = None) -> int:
+        """Drain flushable ops in order through ``apply_fn``.
+
+        ``apply_fn`` returns truthy (or ``None``, the single-endpoint
+        legacy contract) when the authoritative home acknowledged — the
+        record retires to ``done`` — and ``False`` when a W-of-N quorum
+        acked around a partitioned home: the record parks at ``quorum``
+        for later :meth:`reconcile`.  :class:`DisconnectedError` (which a
+        missed quorum subclasses) stops the drain; partial acks stay
+        persisted.  Returns the number of client-complete ops.
         """
         done = 0
+        parked_paths = {r.path for r in self.unreconciled()}
         for rec in self.pending():
             data = None
             if rec.payload_file:
-                if not os.path.exists(rec.payload_file):
+                data = self._read_payload(rec)
+                if data is None:
                     self.mark_done(rec)   # shadow lost after done-crash race
                     continue
-                with open(rec.payload_file, "rb") as f:
-                    data = f.read()
             try:
-                apply_fn(rec, data)
+                home_acked = apply_fn(rec, data)
             except DisconnectedError:
                 break   # WAN down: keep queueing (disconnected operation)
-            self.mark_done(rec)
+            if home_acked is None or home_acked:
+                self.mark_done(rec)
+            else:
+                self.mark_quorum(rec)
+            if rec.op == "store" and rec.path in parked_paths:
+                # a newer close completed: older parked stores of this
+                # path must never reconcile over it
+                self.retire_superseded(rec.path, rec.seq)
             done += 1
             if max_ops is not None and done >= max_ops:
                 break
         return done
 
-    def replay(self, apply_fn: Callable[[OpRecord, Optional[bytes]], None],
-               ) -> int:
-        """Post-crash convergence: re-drain every record still pending.
+    def replay(self, apply_fn: Callable[[OpRecord, Optional[bytes]],
+                                        Optional[bool]]) -> int:
+        """Post-crash convergence: re-drain every record still flushable.
 
-        A record is pending until ``apply_fn`` ran to completion — a crash
-        *between* the authoritative apply and any secondary effect (e.g.
-        the replica fan-out) therefore re-applies the whole record.  Safe
-        because stores overwrite and deletes are tolerant.
+        A record is flushable until its quorum was met — a crash *between*
+        two endpoint acks resumes from the persisted ack set, skipping
+        endpoints that already confirmed.  Safe because versioned applies
+        are idempotent (stores overwrite same-or-older versions only,
+        deletes are tolerant).
         """
         return self.flush(apply_fn)
 
+    def reconcile(self, apply_fn: Callable[[OpRecord, Optional[bytes]],
+                                           Optional[bool]]) -> int:
+        """Land the home apply for quorum-parked ops (home healed).
+
+        Each record that ``apply_fn`` now reports home-acked retires to
+        ``done``; records whose home is still unreachable stay parked.
+        Returns the number of records retired.
+        """
+        retired = 0
+        for rec in self.unreconciled():
+            data = self._read_payload(rec)
+            if rec.payload_file and data is None:
+                self.mark_done(rec)       # shadow lost after done-crash race
+                continue
+            try:
+                home_acked = apply_fn(rec, data)
+            except DisconnectedError:
+                continue                  # home still down: stay parked
+            if home_acked is None or home_acked:
+                self.mark_done(rec)
+                retired += 1
+        return retired
+
     def compact(self) -> None:
-        """Rewrite the WAL keeping only pending records."""
+        """Rewrite the WAL keeping only live (flushable/quorum) records."""
         self._compacting = True
         try:
-            recs = self.pending()
+            recs = sorted(self.pending() + self.unreconciled(),
+                          key=lambda r: r.seq)
             tmp = self.wal_path + ".tmp"
             with open(tmp, "w") as f:
                 for rec in recs:

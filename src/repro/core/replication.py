@@ -13,9 +13,12 @@ recipe (replica catalog + striped transfer):
     equivalent of ``cache.INVALID``).
   * :class:`ReplicaSet` places the replicas, routes reads to the
     lowest-latency fresh holder (home is always the terminal fallback),
-    fans writes out home-first-then-replicas so a lagging or partitioned
-    replica never blocks the client, and repairs divergence via
-    ``resync()`` (anti-entropy over the home version vector).
+    fans writes out home-first-then-replicas under a W-of-N ack policy
+    (``write_quorum``; see ``docs/consistency.md``) so a lagging or
+    partitioned replica never blocks the client below W — and a
+    partitioned *home* no longer stalls writes when W > 1 — and repairs
+    divergence via ``resync()`` (anti-entropy over the home version
+    vector).
 
 The catalog is metadata colocated with the home service and mirrored to
 clients over the callback channel; lookups are therefore modeled as free —
@@ -24,29 +27,61 @@ only data movement and per-operation RPCs charge the virtual clock.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple, Union
 
 from repro.core.store import HomeStore, ObjectStat
 from repro.core.striping import StripedTransfer
-from repro.core.transport import DisconnectedError, Network, respond
+from repro.core.transport import (
+    AuthError, DisconnectedError, Network, respond,
+)
 
 #: A read source the client can try: (endpoint name, store, auth token).
 ReadSource = Tuple[str, HomeStore, str]
 
+#: Write-ack policy: an explicit W, or "majority" / "all" of the N
+#: endpoints (home + replicas).  W=1 degenerates to the legacy policy —
+#: the home apply alone is the ack and replica fan-out stays best-effort.
+WritePolicy = Union[int, str]
+
 
 class ReplicaCatalog:
-    """``path -> {endpoint: version}`` plus the home version per path."""
+    """``path -> {endpoint: version}`` plus the home version per path.
+
+    ``quorum_versions`` additionally tracks versions that reached a write
+    quorum while home was partitioned: freshness is judged against the
+    newest version known on *either* channel, so a read may be served
+    fresh from an acked replica even when home has never seen the write.
+    """
 
     def __init__(self) -> None:
         self.home_versions: Dict[str, int] = {}
+        self.quorum_versions: Dict[str, int] = {}
         self._holders: Dict[str, Dict[str, int]] = {}
 
     # ---- home side -------------------------------------------------------
     def note_home(self, path: str, version: int) -> None:
         self.home_versions[path] = version
+        qv = self.quorum_versions.get(path)
+        if qv is not None and version >= qv:
+            # home caught up with the quorum write: single authority again
+            del self.quorum_versions[path]
 
     def home_version(self, path: str) -> Optional[int]:
         return self.home_versions.get(path)
+
+    # ---- quorum side -----------------------------------------------------
+    def note_quorum(self, path: str, version: int) -> None:
+        """A W-of-N quorum acked ``version`` with home unreachable."""
+        if version > self.quorum_versions.get(path, 0):
+            self.quorum_versions[path] = version
+
+    def freshness_floor(self, path: str) -> Optional[int]:
+        """Newest version known home-side or via a quorum ack."""
+        hv = self.home_versions.get(path)
+        qv = self.quorum_versions.get(path)
+        if qv is not None and (hv is None or qv > hv):
+            return qv
+        return hv
 
     # ---- holders ---------------------------------------------------------
     def record(self, path: str, endpoint: str, version: int) -> None:
@@ -67,13 +102,15 @@ class ReplicaCatalog:
         return [p for p, h in self._holders.items() if endpoint in h]
 
     def fresh_holders(self, path: str) -> List[str]:
-        """Endpoints holding a version at least as new as home's.
+        """Endpoints holding a version at least as new as the floor.
 
-        Unknown home version means the catalog never saw the object — only
-        home can be trusted.  A negative home version is a deletion: nothing
-        is fresh.
+        The floor is the newest version seen from home *or* acked by a
+        write quorum — a replica that acked a quorum write serves it fresh
+        even while home is partitioned.  An unknown floor means the
+        catalog never saw the object — only home can be trusted.  A
+        negative floor is a deletion: nothing is fresh.
         """
-        hv = self.home_versions.get(path)
+        hv = self.freshness_floor(path)
         if hv is None or hv < 0:
             return []
         return [ep for ep, v in self._holders.get(path, {}).items()
@@ -94,11 +131,13 @@ class ReplicaSet:
     """Places, routes to, and repairs the read replicas of one home space."""
 
     def __init__(self, network: Network, home_name: str,
-                 home_store: HomeStore, token: str):
+                 home_store: HomeStore, token: str,
+                 write_quorum: WritePolicy = 1):
         self.network = network
         self.home_name = home_name
         self.home_store = home_store
         self.token = token
+        self.write_quorum = write_quorum
         self.replicas: Dict[str, Replica] = {}
         self.catalog = ReplicaCatalog()
         self.transfer = StripedTransfer(network)
@@ -106,14 +145,78 @@ class ReplicaSet:
         self.fanout_deferred = 0
         home_store.subscribe(self._on_home_change)
 
+    # ---- write-ack policy ------------------------------------------------
+    @property
+    def n_endpoints(self) -> int:
+        """Size of the write group: home + every placed replica."""
+        return 1 + len(self.replicas)
+
+    def resolve_w(self) -> int:
+        """Acks required before the flusher may retire a write."""
+        n = self.n_endpoints
+        if self.write_quorum == "majority":
+            return n // 2 + 1
+        if self.write_quorum == "all":
+            return n
+        return max(1, min(int(self.write_quorum), n))
+
+    def next_version(self, path: str) -> int:
+        """Client-assigned version for a quorum write around a dead home:
+        one past the newest version any endpoint is known to hold."""
+        best = 0
+        hv = self.catalog.home_version(path)
+        if hv is not None and hv > best:
+            best = hv
+        qv = self.catalog.quorum_versions.get(path)
+        if qv is not None and qv > best:
+            best = qv
+        for ep in self.replicas:
+            v = self.catalog.version_at(path, ep)
+            if v is not None and v > best:
+                best = v
+        return best + 1
+
+    def replicas_by_latency(self, src: str) -> List[str]:
+        """Replica names nearest-first from ``src`` — a W<N quorum should
+        collect its acks over the cheapest links."""
+        return sorted(self.replicas,
+                      key=lambda n: self.network.latency_between(src, n))
+
     # ---- catalog feed (rides the home callback channel) ------------------
     def _on_home_change(self, path: str, st: ObjectStat) -> None:
         self.catalog.note_home(path, st.version)
 
-    def reattach(self) -> None:
-        """Re-subscribe after a home-server crash dropped subscriptions."""
+    def reattach(self, token: Optional[str] = None,
+                 via: Optional[str] = None,
+                 skip: Optional[Set[str]] = None) -> bool:
+        """Recover the fabric view after a home-server crash.
+
+        Re-subscribes the catalog feed (the crash dropped it) and
+        re-learns the home version vector, which the catalog may have
+        missed changes to while the channel was down.  ``token`` replaces
+        an auth token the crash invalidated; ``via`` names the endpoint
+        whose link to home gates the refresh — when that link is still
+        partitioned the quorum-side view simply survives untouched;
+        ``skip`` marks quorum-parked paths whose freshness floor must not
+        be evicted before reconciliation lands them at home.
+        Returns True when the home vector was re-learned.
+        """
+        if token is not None:
+            self.token = token
         self.home_store.unsubscribe(self._on_home_change)
         self.home_store.subscribe(self._on_home_change)
+        if via is not None and self.network.is_partitioned(via,
+                                                           self.home_name):
+            return False
+        try:
+            vv = self.home_store.version_vector(self.token)
+        except (AuthError, DisconnectedError):
+            return False   # still crashed / token stale: survive, and let
+            #                Session.remount re-authenticate
+        for path, hv in vv.items():
+            if skip is None or path not in skip:
+                self.catalog.note_home(path, hv)
+        return True
 
     # ---- placement -------------------------------------------------------
     def add_replica(self, name: str, store: HomeStore) -> Replica:
@@ -143,28 +246,33 @@ class ReplicaSet:
         return [src for _, _, src in ranked]
 
     # ---- write-back fan-out ---------------------------------------------
-    def propagate(self, path: str, data: bytes, st: ObjectStat) -> int:
-        """Push one home-applied store to every replica (home -> replica).
+    def apply_to_replica(self, name: str, path: str, data: bytes,
+                         version: int, src: Optional[str] = None) -> bool:
+        """Push one store to one replica and collect its acknowledgement.
 
-        A partitioned replica is recorded as lagging and skipped — fan-out
-        never blocks or fails the flusher on a WAN fault.  Returns the
-        number of replicas brought fresh.
+        ``src`` is the endpoint driving the apply: home during ordinary
+        fan-out and resync (third-party transfer, GridFTP-style), or the
+        client site when the flusher assembles a quorum around a
+        partitioned home.  The explicit ack RPC rides the same pair, so
+        per-pair accounting shows where quorum round-trips went.  A
+        partitioned replica is recorded as lagging and skipped — fan-out
+        never blocks or fails the flusher on a WAN fault.
         """
-        ok = 0
-        for rep in self.replicas.values():
-            try:
-                self.transfer.send(self.home_name, rep.name, data)
-            except DisconnectedError:
-                rep.lagging.add(path)
-                self.catalog.drop(path, rep.name)
-                self.fanout_deferred += 1
-                continue
-            rep.store.put(rep.token, path, data, version=st.version)
-            self.catalog.record(path, rep.name, st.version)
-            rep.lagging.discard(path)
-            self.fanout_ok += 1
-            ok += 1
-        return ok
+        rep = self.replicas[name]
+        src = src or self.home_name
+        try:
+            self.transfer.send(src, name, data)
+            rep.store.put(rep.token, path, data, version=version)
+            self.network.rpc(name, src, "write_ack")   # the ack round-trip
+        except DisconnectedError:
+            rep.lagging.add(path)
+            self.catalog.drop(path, name)
+            self.fanout_deferred += 1
+            return False
+        self.catalog.record(path, name, version)
+        rep.lagging.discard(path)
+        self.fanout_ok += 1
+        return True
 
     def propagate_delete(self, path: str) -> int:
         ok = 0
@@ -186,19 +294,26 @@ class ReplicaSet:
         return ok
 
     # ---- anti-entropy ----------------------------------------------------
-    def resync(self) -> int:
+    def resync(self, skip: Optional[Set[str]] = None) -> int:
         """Converge every replica onto the home version vector.
 
         Pushes missing/stale objects, removes deleted ones, and refreshes
         the catalog's home-version view (which also recovers from a home
-        crash that dropped the notification subscription).  Returns the
-        number of repair transfers performed.
+        crash that dropped the notification subscription).  ``skip`` names
+        paths with a quorum-parked write still awaiting home
+        reconciliation: home's numerically-higher-but-older version must
+        not overwrite the acked replica bytes or evict the quorum
+        freshness floor.  Returns the number of repair transfers.
         """
+        skip = skip or set()
         vv = self.home_store.version_vector(self.token)
         for path, hv in vv.items():
-            self.catalog.note_home(path, hv)
+            if path not in skip:
+                self.catalog.note_home(path, hv)
         repaired = 0
         for path, hv in vv.items():
+            if path in skip:
+                continue
             blob = None       # home disk read shared across replicas
             for rep in self.replicas.values():
                 held = self.catalog.version_at(path, rep.name)
@@ -211,19 +326,14 @@ class ReplicaSet:
                     except FileNotFoundError:
                         break   # deleted since the vector snapshot
                 data, st = blob
-                try:
-                    self.transfer.send(self.home_name, rep.name, data)
-                except DisconnectedError:
-                    rep.lagging.add(path)
-                    continue
-                rep.store.put(rep.token, path, data, version=st.version)
-                self.catalog.record(path, rep.name, st.version)
-                rep.lagging.discard(path)
-                repaired += 1
+                if self.apply_to_replica(rep.name, path, data, st.version):
+                    repaired += 1
         for rep in self.replicas.values():
-            # drop objects deleted at home
+            # drop objects deleted at home (a parked quorum write that home
+            # has never seen is NOT deleted-at-home — its replica copies
+            # are the only durable ones)
             for path in self.catalog.paths_at(rep.name):
-                if path in vv:
+                if path in vv or path in skip:
                     continue
                 try:
                     self.network.rpc(self.home_name, rep.name,

@@ -12,7 +12,7 @@ from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional
 
 from repro.core.namespace import XufsClient
-from repro.core.replication import ReplicaSet
+from repro.core.replication import ReplicaSet, WritePolicy
 from repro.core.store import HomeStore
 from repro.core.transport import (
     AuthError, Endpoint, KeyPhrase, Network, respond,
@@ -51,8 +51,7 @@ class Session:
         token = _authenticate(self.server)
         self.token = token
         if self.replicas is not None:
-            self.replicas.token = token
-            self.replicas.reattach()
+            self.replicas.reattach(token=token)
         self.client.mount(prefix, self.server.endpoint.name,
                           self.server.store, token,
                           localized=localized, replicas=self.replicas)
@@ -67,7 +66,8 @@ def ussh_login(user: str, network: Network, home_root: str,
                site_root: str, *, home_name: str = "home",
                site_name: str = "site",
                mounts: Optional[Dict[str, List[str]]] = None,
-               replica_sites: Optional[Dict[str, float]] = None) -> Session:
+               replica_sites: Optional[Dict[str, float]] = None,
+               write_quorum: "WritePolicy" = 1) -> Session:
     """Login from the personal system into a site; mount the home space.
 
     ``mounts`` maps namespace prefix -> localized sub-prefixes.
@@ -75,6 +75,9 @@ def ussh_login(user: str, network: Network, home_root: str,
     from the compute site; each named site gets a read replica of the
     home space registered in the session's :class:`ReplicaSet`, and cache
     fills route to the nearest fresh replica.
+    ``write_quorum`` sets the write-ack policy over home + replicas: an
+    explicit W, or ``"majority"`` / ``"all"``.  The default (1) is the
+    legacy policy — the home apply alone acks and fan-out is best-effort.
     """
     home_ep = Endpoint(home_name, network)
     Endpoint(site_name, network)
@@ -88,7 +91,8 @@ def ussh_login(user: str, network: Network, home_root: str,
     replicas: Optional[ReplicaSet] = None
     if replica_sites:
         replicas = ReplicaSet(network=network, home_name=home_name,
-                              home_store=store, token=token)
+                              home_store=store, token=token,
+                              write_quorum=write_quorum)
         for rname, latency_s in replica_sites.items():
             rep_ep = Endpoint(rname, network)
             network.set_link(site_name, rname,

@@ -101,6 +101,22 @@ class HomeStore:
         self._notify(path, st)
         return st
 
+    def apply_versioned(self, token: str, path: str, data: bytes,
+                        version: int) -> ObjectStat:
+        """Idempotent versioned apply (the quorum-write primitive).
+
+        Writes only if ``version`` is newer than what the store holds and
+        returns the stat the store ends up with either way — a flusher
+        retry after a crash, or a late home reconciliation of a
+        quorum-acked op, must never roll an object back to an older
+        version.
+        """
+        self.check(token)
+        cur = self.stat_unchecked(path)
+        if cur is not None and cur.version >= version:
+            return cur
+        return self.put(token, path, data, version=version)
+
     def get(self, token: str, path: str) -> Tuple[bytes, ObjectStat]:
         self.check(token)
         st = self.stat_unchecked(path)

@@ -32,6 +32,15 @@ class DisconnectedError(ConnectionError):
     """The WAN link between two endpoints is down."""
 
 
+class QuorumNotReachedError(DisconnectedError):
+    """Fewer than W of the N write endpoints acknowledged an apply.
+
+    Subclasses :class:`DisconnectedError` because a missed quorum is a
+    connectivity-induced stall: the flusher stops draining and the op
+    stays queued (with its partial acks persisted) until links heal.
+    """
+
+
 class AuthError(PermissionError):
     """HMAC challenge failed."""
 
@@ -73,6 +82,8 @@ class Network:
     _links: Dict[Tuple[str, str], LinkModel] = field(default_factory=dict)
     per_endpoint_rpcs: Dict[str, int] = field(default_factory=dict)
     per_endpoint_bytes: Dict[str, int] = field(default_factory=dict)
+    per_pair_rpcs: Dict[Tuple[str, str], int] = field(default_factory=dict)
+    per_pair_bytes: Dict[Tuple[str, str], int] = field(default_factory=dict)
 
     # ---- endpoints ----------------------------------------------------
     def register(self, ep: "Endpoint") -> None:
@@ -126,7 +137,16 @@ class Network:
         self.rpc_count += 1
         self.account(src, payload_bytes)
         self.account(dst, payload_bytes)
+        pair = (min(src, dst), max(src, dst))
+        self.per_pair_rpcs[pair] = self.per_pair_rpcs.get(pair, 0) + 1
+        self.per_pair_bytes[pair] = \
+            self.per_pair_bytes.get(pair, 0) + payload_bytes
         return dt
+
+    def pair_rpcs(self, a: str, b: str) -> int:
+        """RPCs that crossed the ``a <-> b`` link (ack accounting reads
+        this to assert quorum round-trips went over the right pairs)."""
+        return self.per_pair_rpcs.get((min(a, b), max(a, b)), 0)
 
     def account(self, endpoint: str, payload_bytes: int = 0,
                 rpcs: int = 1) -> None:

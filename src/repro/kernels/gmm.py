@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 DEFAULT_BLOCK_M = 128
 DEFAULT_BLOCK_K = 512
 DEFAULT_BLOCK_N = 512
@@ -69,7 +71,7 @@ def gmm(lhs: jax.Array, rhs: jax.Array, tile_group_ids: jax.Array, *,
         kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((M, N), lhs.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(tile_group_ids, lhs, rhs)

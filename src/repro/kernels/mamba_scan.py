@@ -15,6 +15,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 DEFAULT_CHUNK = 64
 DEFAULT_BLOCK_D = 256
 
@@ -79,7 +81,7 @@ def mamba_scan(A: jax.Array, dt: jax.Array, b: jax.Array, c: jax.Array,
                                lambda bi, di_, ci: (bi, ci, di_)),
         out_shape=jax.ShapeDtypeStruct((B, S, di), jnp.float32),
         scratch_shapes=[pltpu.VMEM((block_d, N), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(A, dt, b, c, x)

@@ -1,0 +1,13 @@
+"""Version-tolerant aliases over ``jax.experimental.pallas.tpu``.
+
+The TPU compiler-params dataclass is spelled ``TPUCompilerParams`` on
+older jax releases and ``CompilerParams`` on newer ones; the CI matrix
+covers both spellings, so kernels import :data:`CompilerParams` from
+here instead of hard-coding either name.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")

@@ -23,6 +23,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 DEFAULT_CHUNK = 64
 
 
@@ -98,7 +100,7 @@ def rwkv6_scan(r: jax.Array, k: jax.Array, v: jax.Array, w: jax.Array,
         out_specs=pl.BlockSpec((1, chunk, D), x_map),
         out_shape=jax.ShapeDtypeStruct((B * H, S, D), jnp.float32),
         scratch_shapes=[pltpu.VMEM((D, D), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(resh(r), resh(k), resh(v), resh(w), ur)

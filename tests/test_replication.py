@@ -121,15 +121,15 @@ def test_flusher_crash_then_replay_converges_replicas(rsession):
     with s.client.open("home/out/r.dat", "w") as f:
         f.write(payload)
 
-    real_propagate = s.replicas.propagate
+    real_apply = s.replicas.apply_to_replica
 
-    def crash(path, data, st):
+    def crash(name, path, data, version, src=None):
         raise RuntimeError("flusher crashed after home apply")
 
-    s.replicas.propagate = crash
+    s.replicas.apply_to_replica = crash
     with pytest.raises(RuntimeError):
         s.client.pump()
-    s.replicas.propagate = real_propagate
+    s.replicas.apply_to_replica = real_apply
 
     # home applied, replicas did not, record still pending (not marked done)
     assert s.server.store.get(s.token, "home/out/r.dat")[0] == payload
@@ -190,6 +190,240 @@ def test_deleted_at_home_drops_replicas_from_read_path(rsession):
     assert s.replicas.catalog.fresh_holders(path) == []
     with pytest.raises(FileNotFoundError):
         s.client._fetch(s.client._mount_for(path), path)
+
+
+# ---- quorum-acknowledged writes --------------------------------------------
+
+def qlogin(tmp_path, write_quorum, tag="q"):
+    from repro.core import LinkModel, Network, ussh_login
+    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
+    return ussh_login("sci", net, str(tmp_path / f"home-{tag}"),
+                      str(tmp_path / f"site-{tag}"),
+                      replica_sites={"r1": 0.005, "r2": 0.015},
+                      write_quorum=write_quorum)
+
+
+def test_flusher_crash_after_partial_acks_resumes_from_persisted_acks(
+        tmp_path):
+    """Crash after W-1 acks: the persisted ack set is the resume point —
+    replay never re-contacts an endpoint that already confirmed."""
+    s = qlogin(tmp_path, "majority")           # N=3 -> W=2
+    payload = b"Q" * 200_000
+    with s.client.open("home/out/q.dat", "w") as f:
+        f.write(payload)
+
+    real_apply = s.replicas.apply_to_replica
+
+    def crash_before_any_replica(name, path, data, version, src=None):
+        raise RuntimeError("flusher crashed after the home ack (W-1=1)")
+
+    s.replicas.apply_to_replica = crash_before_any_replica
+    with pytest.raises(RuntimeError):
+        s.client.pump()
+    s.replicas.apply_to_replica = real_apply
+
+    # the home ack survived the crash, persisted in the WAL
+    [rec] = s.client.oplog.pending()
+    assert rec.acked == ["home"]
+    assert rec.status == "applied@home"
+    assert rec.version == s.server.store.stat(s.token,
+                                              "home/out/q.dat").version
+
+    # a fresh queue over the same WAL (new flusher process) sees the acks
+    from repro.core.oplog import MetaOpQueue
+    [rec2] = MetaOpQueue(s.client.oplog.root).pending()
+    assert rec2.acked == ["home"] and rec2.version == rec.version
+
+    # replay resumes from the ack set: no new traffic crosses site<->home
+    home_rpcs = s.client.network.pair_rpcs("site", "home")
+    assert s.client.replay() == 1
+    assert s.client.network.pair_rpcs("site", "home") == home_rpcs
+    assert s.client.oplog.pending() == []
+    for rep in s.replicas.replicas.values():
+        assert rep.store.get(rep.token, "home/out/q.dat")[0] == payload
+
+
+def test_home_partitioned_whole_write_majority_quorum_still_acks(tmp_path):
+    """The headline: home down for the entire write, majority still acks
+    — and a cold read is served fresh from an acked replica."""
+    s = qlogin(tmp_path, "majority")
+    for pair in (("site", "home"), ("home", "r1"), ("home", "r2")):
+        s.client.network.partition(*pair)
+    payload = b"H" * 250_000
+    path = "home/out/h.dat"
+    with s.client.open(path, "w") as f:
+        f.write(payload)
+
+    assert s.client.pump() == 1                  # acked without home
+    assert s.client.sync() == 0                  # client-complete: no backlog
+    [rec] = s.client.oplog.unreconciled()
+    assert rec.status == "quorum"
+    assert sorted(rec.acked) == ["r1", "r2"]
+    with pytest.raises(FileNotFoundError):
+        s.server.store.get(s.token, path)        # home never saw it
+
+    # quorum-aware read: replicas are fresh holders despite home silence
+    assert sorted(s.replicas.catalog.fresh_holders(path)) == ["r1", "r2"]
+    import os
+    os.remove(s.client.cache.data_path(path))    # evict: force a cold fill
+    os.remove(s.client.cache.attr_path(path))
+    with s.client.open(path) as f:
+        assert f.read() == payload
+    assert s.client.cache.fills_from.get("r1") == 1
+
+    # heal: reconnect() reattaches + reconciles the parked op to home
+    for pair in (("site", "home"), ("home", "r1"), ("home", "r2")):
+        s.client.network.heal(*pair)
+    s.client.reconnect()
+    assert s.client.oplog.unreconciled() == []
+    data, st = s.server.store.get(s.token, path)
+    assert data == payload and st.version == rec.version
+    assert s.replicas.catalog.home_version(path) == rec.version
+
+
+def test_w_all_blocks_on_lagging_replica_until_heal(tmp_path):
+    """W=all: one partitioned replica stalls the drain; partial acks are
+    persisted and the op completes on the next pump after the heal."""
+    s = qlogin(tmp_path, "all")
+    s.client.network.partition("home", "r1")
+    s.client.network.partition("site", "r1")
+    payload = b"A" * 120_000
+    with s.client.open("home/out/all.dat", "w") as f:
+        f.write(payload)
+
+    assert s.client.pump() == 0                  # 2/3 acks: not enough
+    [rec] = s.client.oplog.pending()
+    assert sorted(rec.acked) == ["home", "r2"]   # partial acks persisted
+    assert s.client.sync() == 0                  # still blocked
+
+    s.client.network.heal("home", "r1")
+    s.client.network.heal("site", "r1")
+    assert s.client.pump() == 1                  # only r1 is contacted now
+    assert s.client.oplog.pending() == []
+    data, st = s.replicas.replicas["r1"].store.get(
+        s.replicas.replicas["r1"].token, "home/out/all.dat")
+    assert data == payload
+    assert st.version == rec.version
+
+
+def test_w1_baseline_stalls_when_home_is_down(tmp_path):
+    """W=1 degenerates to the legacy policy: no home, no ack — replicas
+    alone never satisfy the write, exactly the gap quorum writes close."""
+    s = qlogin(tmp_path, 1)
+    s.client.network.partition("site", "home")
+    with s.client.open("home/out/w1.dat", "w") as f:
+        f.write(b"stall")
+    assert s.client.pump() == 0
+    assert [r.path for r in s.client.oplog.pending()] == ["home/out/w1.dat"]
+    for rep in s.replicas.replicas.values():
+        with pytest.raises(FileNotFoundError):
+            rep.store.get(rep.token, "home/out/w1.dat")
+
+
+def test_delete_after_parked_quorum_store_is_not_resurrected(tmp_path):
+    """A delete that lands at home retires the quorum-parked store it
+    supersedes — reconcile must not resurrect the deleted file."""
+    s = qlogin(tmp_path, "majority")
+    path = "home/out/gone.dat"
+    s.client.network.partition("site", "home")
+    with s.client.open(path, "w") as f:
+        f.write(b"ghost" * 1000)
+    assert s.client.pump() == 1                  # parked at quorum
+    assert len(s.client.oplog.unreconciled()) == 1
+
+    s.client.network.heal("site", "home")
+    s.client.unlink(path)
+    assert s.client.pump() == 1                  # delete lands at home
+    assert s.client.oplog.unreconciled() == []   # parked store retired
+
+    assert s.client.replay() == 0                # nothing left to re-drive
+    with pytest.raises(FileNotFoundError):
+        s.server.store.get(s.token, path)
+    for rep in s.replicas.replicas.values():
+        with pytest.raises(FileNotFoundError):
+            rep.store.get(rep.token, path)
+
+
+def test_reconcile_lands_on_top_when_catalog_undercounted_version(tmp_path):
+    """A fresh client's catalog may not know home's version; its quorum
+    write pins too small a version, but reconciliation must still land
+    the acknowledged bytes at home — on top, never silently dropped."""
+    s = qlogin(tmp_path, "majority")
+    path = "home/out/vc.dat"
+    for _ in range(3):                           # home holds v3
+        s.server.store.put(s.token, path, b"old")
+    s.replicas.resync()
+    # simulate a fresh client session: the in-memory catalog starts cold
+    s.replicas.catalog.home_versions.clear()
+    s.replicas.catalog.quorum_versions.clear()
+    s.replicas.catalog._holders.clear()
+
+    for pair in (("site", "home"), ("home", "r1"), ("home", "r2")):
+        s.client.network.partition(*pair)
+    with s.client.open(path, "w") as f:
+        f.write(b"new-bytes")
+    assert s.client.pump() == 1                  # quorum at pinned v1
+    [rec] = s.client.oplog.unreconciled()
+    assert rec.version == 1                      # the under-count
+
+    for pair in (("site", "home"), ("home", "r1"), ("home", "r2")):
+        s.client.network.heal(*pair)
+    s.client.reconnect()                         # reattach + reconcile
+    data, st = s.server.store.get(s.token, path)
+    assert data == b"new-bytes"                  # the acked write survived
+    assert st.version == 4                       # landed on top of v3
+    assert s.client.oplog.unreconciled() == []
+
+
+def test_newer_close_retires_parked_quorum_store(tmp_path):
+    """Last-close-wins extends to parked records: once a newer write to
+    the same path completes, reconcile must never land the older bytes."""
+    s = qlogin(tmp_path, "majority")
+    path = "home/out/lww.dat"
+    s.client.network.partition("site", "home")
+    with s.client.open(path, "w") as f:
+        f.write(b"old-quorum" * 100)
+    assert s.client.pump() == 1                  # parks at quorum
+    s.client.network.heal("site", "home")
+
+    with s.client.open(path, "w") as f:
+        f.write(b"new-final" * 100)
+    assert s.client.pump() == 1                  # lands at home, done
+    assert s.client.oplog.unreconciled() == []   # parked store retired
+
+    s.client.replay()                            # reconcile is a no-op
+    data, _st = s.server.store.get(s.token, path)
+    assert data == b"new-final" * 100
+
+
+def test_resync_never_clobbers_quorum_acked_replica_bytes(tmp_path):
+    """Anti-entropy must not push home's numerically-higher-but-older
+    version over replicas holding a quorum-acked write (nor drop a
+    parked path home has never seen)."""
+    s = qlogin(tmp_path, "majority")
+    path = "home/out/guard.dat"
+    for _ in range(3):                           # home holds v3, old bytes
+        s.server.store.put(s.token, path, b"old")
+    s.replicas.resync()
+    # fresh-session catalog: knows nothing of v3
+    s.replicas.catalog.home_versions.clear()
+    s.replicas.catalog.quorum_versions.clear()
+    s.replicas.catalog._holders.clear()
+
+    s.client.network.partition("site", "home")   # home-side links stay up
+    with s.client.open(path, "w") as f:
+        f.write(b"acked-new")
+    with s.client.open("home/out/fresh.dat", "w") as f:
+        f.write(b"only-on-replicas")
+    assert s.client.pump() == 2                  # both park at quorum
+
+    s.client.replay()                            # resync runs mid-outage
+    for rep in s.replicas.replicas.values():
+        assert rep.store.get(rep.token, path)[0] == b"acked-new"
+        assert rep.store.get(rep.token,
+                             "home/out/fresh.dat")[0] == b"only-on-replicas"
+    # the quorum freshness floor survived: replicas still serve the write
+    assert sorted(s.replicas.catalog.fresh_holders(path)) == ["r1", "r2"]
 
 
 # ---- write fan-out end-to-end ---------------------------------------------
