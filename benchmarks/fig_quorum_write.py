@@ -12,6 +12,11 @@ Rows report modeled WAN seconds / fractions:
 
   quorum_write/ack_latency_<policy>_s          healthy-network mean time
                                                from apply start to W-th ack
+  quorum_write/drain_<policy>_s                healthy-network virtual time
+                                               for the full sync() drain of
+                                               the op set (clock stops at
+                                               each op's W-th ack; later
+                                               acks settle in background)
   quorum_write/home_outage_<policy>_acked_frac fraction of writes that
                                                became client-complete with
                                                home fully partitioned
@@ -22,10 +27,13 @@ Rows report modeled WAN seconds / fractions:
                                                writes that reached home
                                                after the heal
 
-Run standalone, the script exits non-zero unless: ack latency strictly
-orders W=1 < majority < all; majority keeps acking (and reads stay
-fresh) through the outage while W=1 and W=all stall; and every policy
-converges home after the heal — the acceptance gate for quorum writes.
+Run standalone (and from ``run.py --smoke`` in CI), the script exits
+non-zero unless: ack latency strictly orders W=1 < majority < all; under
+overlapped fan-out the DRAIN time also orders W=1 <= majority and
+majority strictly beats all (the channel-clock acceptance gate — on the
+old inline clock every policy paid the same full fan-out drain);
+majority keeps acking (and reads stay fresh) through the outage while
+W=1 and W=all stall; and every policy converges home after the heal.
 """
 from __future__ import annotations
 
@@ -64,12 +72,6 @@ def _write_files(s, n_files: int, size: int, prefix: str) -> list:
     return paths
 
 
-def _evict(s, path: str) -> None:
-    for fp in (s.client.cache.data_path(path), s.client.cache.attr_path(path)):
-        if os.path.exists(fp):
-            os.remove(fp)
-
-
 def run(smoke: bool = False) -> int:
     from repro.core import MB
 
@@ -96,6 +98,28 @@ def run(smoke: bool = False) -> int:
             failures.append(
                 f"ack latency not ordered w1<majority<all: {ack}")
 
+        # ---- healthy network: full drain time per policy -----------------
+        # Same op set, overlapped fan-out: the flusher's clock stops at
+        # each op's W-th ack, so fewer required acks => faster drain.
+        drain = {}
+        for name, policy in POLICIES:
+            s = _login(policy, root, f"drain-{name}")
+            _write_files(s, n_files, size, "drn")
+
+            def timed_drain(s=s):
+                c0 = s.client.network.clock
+                s.client.sync()
+                return s.client.network.clock - c0
+
+            us, drain_s = timed(timed_drain)
+            drain[name] = drain_s
+            emit(f"quorum_write/drain_{name}_s", us, f"{drain_s:.4f}")
+            s.client.network.drain()     # settle background fan-out
+        if not (drain["w1"] <= drain["majority"] < drain["all"]):
+            failures.append(
+                f"drain time not ordered w1<=majority<all under "
+                f"overlapped fan-out: {drain}")
+
         # ---- home outage: who keeps acking? ------------------------------
         healed = {}
         for name, policy in POLICIES:
@@ -117,7 +141,7 @@ def run(smoke: bool = False) -> int:
                 # reads stay fresh: cold fills come from acked replicas
                 fresh = 0
                 for i, p in enumerate(paths):
-                    _evict(s, p)
+                    s.client.cache.evict(p)
                     with s.client.open(p) as f:
                         fresh += int(f.read() == bytes([i % 251]) * size)
                 us2 = 0.0
@@ -161,5 +185,6 @@ if __name__ == "__main__":
     rc = run(smoke="--smoke" in sys.argv)
     if rc == 0:
         print("quorum_write: OK (majority survives the home outage; "
-              "W=1 stalls; heal converges home)")
+              "W=1 stalls; heal converges home; overlapped fan-out "
+              "drains majority strictly faster than all)")
     raise SystemExit(rc)

@@ -1,34 +1,64 @@
 """Paper §2.2: file-sharing census — private-by-default namespaces.
 
 The paper found 1 of 1,964 users shared files.  XUFS's answer is private
-per-user namespaces: this benchmark creates N user sessions against one
-network and verifies (a) zero cross-user object visibility, (b) zero
-cross-user auth-token validity, and reports the census.
+per-user namespaces; the replica fabric must not widen that.  Two parts:
+
+  * **Private census** (the original): N user sessions — now each with
+    read replicas placed — against one network.  Verifies (a) zero
+    cross-user object visibility, (b) zero cross-user auth-token
+    validity *including against every replica store* (a replica of a
+    private home space is as private as the home), and reports the
+    census.
+
+  * **Shared-mount census** (replica placement): many clients mount the
+    SAME home space (the paper's shared project data case).  With no
+    replicas every cold read hammers the far home link; with replicas
+    placed, fills route to near replica sites.  Reports where the fills
+    landed (`home_fills` vs `replica_fills`), the offload fraction, and
+    the modeled WAN time for the sweep — how placement changes the
+    sharing picture.
+
+Run standalone, exits non-zero if privacy is violated or if replica
+placement fails to serve a shared namespace faster than home-only.
 """
 from __future__ import annotations
 
+import os
+import sys
 import tempfile
+from dataclasses import replace as _dc_replace
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 from benchmarks.common import emit, timed
 
-N_USERS = 32
-SMOKE_USERS = 6                   # census check is O(n^2)
+N_USERS = 16                      # census check is O(n^2)
+SMOKE_USERS = 4
+N_CLIENTS = 8                     # shared-mount readers
+SMOKE_CLIENTS = 3
+N_SHARED_FILES = 12
+SMOKE_SHARED_FILES = 4
 
 
-def run(smoke: bool = False) -> None:
-    from repro.core import Network, ussh_login, AuthError
+def _private_census(n_users: int) -> int:
+    from repro.core import AuthError, LinkModel, Network, ussh_login
 
-    n_users = SMOKE_USERS if smoke else N_USERS
+    failures = 0
     with tempfile.TemporaryDirectory() as td:
-        net = Network()
+        net = Network(link=LinkModel(latency_s=0.060))
         sessions = []
 
         def make_users():
             for i in range(n_users):
-                s = ussh_login(f"user{i}", net, f"{td}/h{i}", f"{td}/s{i}",
-                               home_name=f"home{i}", site_name=f"site{i}")
+                s = ussh_login(
+                    f"user{i}", net, f"{td}/h{i}", f"{td}/s{i}",
+                    home_name=f"home{i}", site_name=f"site{i}",
+                    replica_sites={f"u{i}r1": 0.005, f"u{i}r2": 0.015})
                 s.server.store.put(s.token, f"home/private_{i}.dat",
                                    b"secret" * 100)
+                s.replicas.resync()          # private bytes now replicated
                 sessions.append(s)
             return len(sessions)
 
@@ -37,6 +67,7 @@ def run(smoke: bool = False) -> None:
 
         cross_visible = 0
         cross_auth_ok = 0
+        replica_cross_auth_ok = 0
         for i, si in enumerate(sessions):
             for j, sj in enumerate(sessions):
                 if i == j:
@@ -46,10 +77,124 @@ def run(smoke: bool = False) -> None:
                     cross_auth_ok += 1
                 except (AuthError, FileNotFoundError):
                     pass
+                # the replica fabric must not widen the trust boundary:
+                # user i's token is worthless at user j's replica stores
+                for rep in sj.replicas.replicas.values():
+                    try:
+                        rep.store.get(si.token, f"home/private_{j}.dat")
+                        replica_cross_auth_ok += 1
+                    except (AuthError, FileNotFoundError):
+                        pass
                 got = si.server.store.listdir(si.token, "home/")
                 cross_visible += sum(1 for st in got
                                      if st.path == f"home/private_{j}.dat")
         emit("sharing/cross_user_reads", 0.0, cross_auth_ok)
+        emit("sharing/cross_user_replica_reads", 0.0, replica_cross_auth_ok)
         emit("sharing/cross_user_listings", 0.0, cross_visible)
-        emit("sharing/private_fraction", 0.0,
-             1.0 if (cross_auth_ok + cross_visible) == 0 else 0.0)
+        leaks = cross_auth_ok + replica_cross_auth_ok + cross_visible
+        emit("sharing/private_fraction", 0.0, 1.0 if leaks == 0 else 0.0)
+        if leaks:
+            print(f"FAIL: {leaks} cross-user leaks with replicas placed",
+                  file=sys.stderr)
+            failures += 1
+    return failures
+
+
+def _shared_mount_census(n_clients: int, n_files: int) -> int:
+    """Many clients mount ONE home space; sweep cold reads with and
+    without replica placement and report where the fills landed."""
+    from repro.core import (
+        Endpoint, HomeStore, LinkModel, Network, ReplicaSet, XufsClient,
+    )
+    from repro.core.transport import respond
+
+    size = 32 * 1024
+    failures = 0
+    results = {}
+    with tempfile.TemporaryDirectory() as td:
+        for n_replicas in (0, 2):
+            net = Network(link=LinkModel(latency_s=0.060))
+            home_ep = Endpoint("proj_home", net)
+            store = HomeStore(f"{td}/proj-{n_replicas}", endpoint=home_ep)
+            token = store.authenticate(
+                lambda ch: respond(store.keyphrase, ch))
+            for i in range(n_files):
+                store.put(token, f"proj/shared_{i}.dat", b"s" * size)
+            replicas = None
+            if n_replicas:
+                replicas = ReplicaSet(net, "proj_home", store, token)
+                for r in range(n_replicas):
+                    rep_ep = Endpoint(f"pr{r}", net)
+                    rstore = HomeStore(f"{td}/rep{n_replicas}-{r}",
+                                       endpoint=rep_ep)
+                    replicas.add_replica(f"pr{r}", rstore)
+                replicas.resync()
+            clients = []
+            for c in range(n_clients):
+                cname = f"csite{n_replicas}_{c}"
+                Endpoint(cname, net)
+                for r in range(n_replicas):
+                    net.set_link(cname, f"pr{r}",
+                                 _dc_replace(net.link,
+                                             latency_s=0.004 * (r + 1)))
+                cl = XufsClient(cname, net,
+                                cache_root=f"{td}/c{n_replicas}-{c}/cache",
+                                oplog_root=f"{td}/c{n_replicas}-{c}/oplog",
+                                owner=f"reader{c}")
+                cl.mount("proj/", "proj_home", store, token,
+                         replicas=replicas)
+                clients.append(cl)
+
+            def sweep(clients=clients, net=net):
+                c0 = net.clock
+                for cl in clients:
+                    for i in range(n_files):
+                        with cl.open(f"proj/shared_{i}.dat") as f:
+                            assert len(f.read()) == size
+                return net.clock - c0
+
+            us, wan_s = timed(sweep)
+            home_fills = sum(cl.cache.fills_from.get("proj_home", 0)
+                             for cl in clients)
+            rep_fills = sum(v for cl in clients
+                            for k, v in cl.cache.fills_from.items()
+                            if k != "proj_home")
+            offload = rep_fills / max(home_fills + rep_fills, 1)
+            tag = f"replicas={n_replicas}"
+            emit(f"sharing/shared_mount_{tag}_wan_s", us, f"{wan_s:.4f}")
+            emit(f"sharing/shared_mount_{tag}_home_fills", 0.0, home_fills)
+            emit(f"sharing/shared_mount_{tag}_replica_fills", 0.0,
+                 rep_fills)
+            emit(f"sharing/shared_mount_{tag}_offload_frac", 0.0,
+                 f"{offload:.2f}")
+            results[n_replicas] = (wan_s, offload)
+
+    wan0, _ = results[0]
+    wan2, offload2 = results[2]
+    if not wan2 < wan0:
+        print(f"FAIL: replica placement did not speed up the shared "
+              f"namespace ({wan2:.4f}s vs home-only {wan0:.4f}s)",
+              file=sys.stderr)
+        failures += 1
+    if offload2 <= 0.9:
+        print(f"FAIL: replicas absorbed only {offload2:.0%} of shared "
+              "fills", file=sys.stderr)
+        failures += 1
+    return failures
+
+
+def run(smoke: bool = False) -> int:
+    n_users = SMOKE_USERS if smoke else N_USERS
+    n_clients = SMOKE_CLIENTS if smoke else N_CLIENTS
+    n_files = SMOKE_SHARED_FILES if smoke else N_SHARED_FILES
+    failures = _private_census(n_users)
+    failures += _shared_mount_census(n_clients, n_files)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    rc = run(smoke="--smoke" in sys.argv)
+    if rc == 0:
+        print("sharing_census: OK (private with replicas placed; shared "
+              "mounts offload to replica sites)")
+    raise SystemExit(rc)

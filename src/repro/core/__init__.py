@@ -1,10 +1,10 @@
 """XUFS core fabric: the paper's contribution as a composable library."""
 from repro.core.transport import (  # noqa: F401
-    Network, Endpoint, LinkModel, KeyPhrase, DisconnectedError, AuthError,
-    QuorumNotReachedError, KB, MB, GB,
+    Network, Endpoint, LinkModel, Transfer, KeyPhrase, DisconnectedError,
+    AuthError, QuorumNotReachedError, KB, MB, GB,
 )
 from repro.core.striping import (  # noqa: F401
-    plan_stripes, reassemble, StripePlan, StripedTransfer,
+    plan_stripes, reassemble, StripePlan, StripedTransfer, TransferGroup,
     STRIPE_THRESHOLD, MIN_BLOCK, MAX_STRIPES,
 )
 from repro.core.store import HomeStore, ObjectStat  # noqa: F401
@@ -12,7 +12,7 @@ from repro.core.cache import CacheSpace, CacheEntry  # noqa: F401
 from repro.core.oplog import MetaOpQueue, OpRecord  # noqa: F401
 from repro.core.callbacks import NotificationManager  # noqa: F401
 from repro.core.replication import (  # noqa: F401
-    Replica, ReplicaCatalog, ReplicaSet, WritePolicy,
+    PendingApply, Replica, ReplicaCatalog, ReplicaSet, WritePolicy,
 )
 from repro.core.lease import LeaseManager  # noqa: F401
 from repro.core.namespace import XufsClient, XufsFile, Mount  # noqa: F401

@@ -106,6 +106,14 @@ class CacheSpace:
             n += 1
         return n
 
+    def evict(self, path: str) -> None:
+        """Drop the cached copy entirely: data file + hidden attr file.
+        The next access is a cold fill (unlike ``invalidate``, which
+        keeps the entry and marks it stale)."""
+        for p in (self.data_path(path), self.attr_path(path)):
+            if os.path.exists(p):
+                os.remove(p)
+
     def invalidate(self, path: str, new_stat: Optional[ObjectStat] = None):
         entry = self.lookup(path)
         if entry is None:

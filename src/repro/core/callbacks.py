@@ -79,17 +79,24 @@ class NotificationManager:
     def reconnect(self, token: str) -> int:
         """Re-register after a break and revalidate all cached entries.
 
-        Returns the number of entries found stale (and invalidated).
+        The per-entry ``revalidate_stat`` probes are pipelined over the
+        channel pool (they are independent round-trips), so revalidating
+        a big cache costs ~ceil(entries / channels) RTTs instead of one
+        RTT per entry.  Returns the number of entries found stale (and
+        invalidated).
         """
         self.pending.clear()
         if self._cb is not None:
             self.store.unsubscribe(self._cb)
         self.register(token)
+        entries = self.cache.entries(self.prefix)
+        probes = [self.network.transfer(self.client_name, self.server_name,
+                                        "revalidate_stat")
+                  for _ in entries]
+        self.network.wait_all(probes)
         stale = 0
-        for entry in self.cache.entries(self.prefix):
+        for entry in entries:
             st = self.store.stat(token, entry.path)
-            self.network.rpc(self.client_name, self.server_name,
-                             "revalidate_stat")
             if st is None:
                 self.cache.invalidate(entry.path)
                 stale += 1

@@ -55,14 +55,22 @@ class LeaseManager:
             self.held.discard(path)
 
     def renew_all(self) -> int:
-        """Periodic renewal; drops leases the server no longer honors."""
+        """Periodic renewal; drops leases the server no longer honors.
+
+        Renewals are independent round-trips, so they ride the channel
+        pool concurrently — one RTT per ``channels_per_pair`` leases, not
+        one per lease.
+        """
         renewed = 0
+        probes = []
         for path in list(self.held):
             try:
-                self.network.rpc(self.client_name, self.server_name,
-                                 "lock_renew")
+                probes.append((path, self.network.transfer(
+                    self.client_name, self.server_name, "lock_renew")))
             except DisconnectedError:
-                return renewed
+                break            # WAN down: only the issued renewals count
+        self.network.wait_all([t for _, t in probes])
+        for path, _t in probes:
             if self.store.renew_lock(self.token, path, self.owner, self.ttl,
                                      self.network.clock):
                 renewed += 1

@@ -174,6 +174,11 @@ class XufsClient:
                 continue        # replica catalog raced a delete; try next
             self.cache.misses += 1
             self.cache.record_fill(server_name)
+            if m.replicas is not None:
+                # read repair: push the bytes we just pulled to any
+                # replica this read observed stale — overlapped, so the
+                # read's own latency is untouched
+                m.replicas.read_repair(self.name, path, data, st.version)
             return self.cache.store_data(path, data, st, state=VALID)
         if last_exc is not None:
             raise last_exc
@@ -217,37 +222,62 @@ class XufsClient:
 
     def unlink(self, path: str) -> None:
         m = self._mount_for(path)
-        entry = self.cache.lookup(path)
-        if entry is not None:
-            dp = self.cache.data_path(path)
-            if os.path.exists(dp):
-                os.remove(dp)
-            ap = self.cache.attr_path(path)
-            if os.path.exists(ap):
-                os.remove(ap)
+        self.cache.evict(path)
         if not m.is_localized(path):
             self.oplog.append("delete", path)
 
     def stat(self, path: str) -> Optional[ObjectStat]:
+        """Metadata read: cached attrs first, then the nearest fresh
+        replica, with home as the authoritative fallback."""
         entry = self.cache.lookup(path)
         if entry is not None and entry.state != INVALID:
             return entry.stat     # served from the hidden attr file
         m = self._mount_for(path)
-        st = m.store.stat(m.token, path)
-        self.network.rpc(self.name, m.server_name, "stat")
-        if st is not None:
-            self.cache.write_entry(CacheEntry(path=path, state=EMPTY,
-                                              stat=st))
-        return st
+        last_exc: Optional[DisconnectedError] = None
+        for server_name, store, token in self._read_sources(m, path):
+            try:
+                self.network.rpc(self.name, server_name, "stat")
+            except DisconnectedError as e:
+                last_exc = e
+                continue
+            st = store.stat(token, path)
+            if st is None and server_name != m.server_name:
+                continue          # replica raced a delete; try the next
+            if st is not None:
+                self.cache.write_entry(CacheEntry(path=path, state=EMPTY,
+                                                  stat=st))
+            return st             # home's answer is authoritative (even None)
+        assert last_exc is not None   # home is always a candidate
+        raise last_exc
+
+    def _meta_sources(self, m: Mount, prefix: str) -> List[ReadSource]:
+        """Candidate servers for a listing: replicas the catalog can prove
+        complete+fresh for the prefix, nearest first, home last."""
+        if m.replicas is not None:
+            return m.replicas.route_meta(self.name, prefix)
+        return [(m.server_name, m.store, m.token)]
 
     def opendir(self, path: str) -> List[ObjectStat]:
-        """Download the directory listing into cache space (paper §3.1)."""
+        """Download the directory listing into cache space (paper §3.1).
+
+        Routed like data reads: the nearest replica whose holdings
+        provably cover the prefix serves the (cheap, low-latency) listing;
+        a partitioned source falls through to the next, ending at home.
+        """
         m = self._mount_for(path)
-        stats = m.store.listdir(m.token, path)
-        meta_bytes = sum(64 + len(s.path) for s in stats)
-        self.network.rpc(self.name, m.server_name, "opendir", meta_bytes)
-        self.cache.populate_listing(stats)
-        return stats
+        last_exc: Optional[DisconnectedError] = None
+        for server_name, store, token in self._meta_sources(m, path):
+            if self.network.is_partitioned(self.name, server_name):
+                last_exc = DisconnectedError(
+                    f"{self.name} <-> {server_name} partitioned")
+                continue
+            stats = store.listdir(token, path)
+            meta_bytes = sum(64 + len(s.path) for s in stats)
+            self.network.rpc(self.name, server_name, "opendir", meta_bytes)
+            self.cache.populate_listing(stats)
+            return stats
+        assert last_exc is not None   # home is always a candidate
+        raise last_exc
 
     def listdir_cached(self, path: str) -> List[CacheEntry]:
         return self.cache.entries(path)
@@ -338,18 +368,30 @@ class XufsClient:
         if len(acked) >= w:
             quorum_clock = self.network.clock
         # home forwards when it has the bytes (third-party transfer);
-        # otherwise the client pushes directly — order by the links the
-        # applies will actually ride
+        # otherwise the client pushes directly.  Every apply is launched
+        # as overlapped channel reservations FIRST; acks are then
+        # collected in completion order, and the clock advances only to
+        # the W-th — acks beyond the quorum settle in the background,
+        # which is exactly why a W<N drain beats W=all on elapsed time.
         src = reps.home_name if home_acked else self.name
+        pending = []
         for name in reps.replicas_by_latency(src):
             if name in acked:
                 continue
-            if reps.apply_to_replica(name, rec.path, data, version, src=src):
-                self.oplog.mark_acked(rec, name, version=version)
-                acked.add(name)
-                if len(acked) >= w and quorum_clock is None:
-                    quorum_clock = self.network.clock
+            p = reps.begin_apply(name, rec.path, data, version, src=src)
+            if p is not None:
+                pending.append(p)
+        pending.sort(key=lambda p: p.ack.completion)
+        for p in pending:
+            reps.complete_apply(p)
+            self.oplog.mark_acked(rec, p.name, version=version)
+            acked.add(p.name)
+            if len(acked) >= w and quorum_clock is None:
+                self.network.wait(p.ack)
+                quorum_clock = self.network.clock
         if len(acked) < w:
+            # the flusher waited out every launched apply before giving up
+            self.network.wait_all([p.ack for p in pending])
             raise QuorumNotReachedError(
                 f"{rec.path}: {len(acked)}/{w} acks "
                 f"(N={reps.n_endpoints})")

@@ -30,9 +30,9 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple, Union
 
 from repro.core.store import HomeStore, ObjectStat
-from repro.core.striping import StripedTransfer
+from repro.core.striping import StripedTransfer, TransferGroup
 from repro.core.transport import (
-    AuthError, DisconnectedError, Network, respond,
+    AuthError, DisconnectedError, Network, Transfer, respond,
 )
 
 #: A read source the client can try: (endpoint name, store, auth token).
@@ -57,6 +57,11 @@ class ReplicaCatalog:
         self.home_versions: Dict[str, int] = {}
         self.quorum_versions: Dict[str, int] = {}
         self._holders: Dict[str, Dict[str, int]] = {}
+        #: True once the FULL home version vector has been learned
+        #: (resync/reattach).  Until then the catalog only knows changes
+        #: it witnessed, so it cannot prove a listing complete — objects
+        #: that predate the subscription may exist at home unseen.
+        self.vector_learned = False
 
     # ---- home side -------------------------------------------------------
     def note_home(self, path: str, version: int) -> None:
@@ -127,6 +132,21 @@ class Replica:
     lagging: Set[str] = field(default_factory=set)   # paths needing repair
 
 
+@dataclass
+class PendingApply:
+    """One in-flight replica apply: stripes on the wire plus the chained
+    ack round-trip.  ``ack.completion`` is when the endpoint counts
+    toward the write quorum."""
+
+    name: str
+    path: str
+    data: bytes
+    version: int
+    src: str
+    group: TransferGroup
+    ack: Transfer
+
+
 class ReplicaSet:
     """Places, routes to, and repairs the read replicas of one home space."""
 
@@ -143,6 +163,7 @@ class ReplicaSet:
         self.transfer = StripedTransfer(network)
         self.fanout_ok = 0
         self.fanout_deferred = 0
+        self.read_repairs = 0
         home_store.subscribe(self._on_home_change)
 
     # ---- write-ack policy ------------------------------------------------
@@ -216,6 +237,7 @@ class ReplicaSet:
         for path, hv in vv.items():
             if skip is None or path not in skip:
                 self.catalog.note_home(path, hv)
+        self.catalog.vector_learned = True
         return True
 
     # ---- placement -------------------------------------------------------
@@ -245,34 +267,128 @@ class ReplicaSet:
         ranked.sort(key=lambda t: (t[0], t[1]))
         return [src for _, _, src in ranked]
 
+    # ---- metadata routing ------------------------------------------------
+    def route_meta(self, client_name: str, prefix: str) -> List[ReadSource]:
+        """Metadata read sources (``stat`` via listing / ``opendir``)
+        nearest-first; home always present as the authoritative fallback.
+
+        A replica may serve a *listing* only when the catalog can prove it
+        complete and fresh for the prefix: the full home version vector
+        has been learned at least once (``vector_learned`` — an
+        incremental change feed alone cannot rule out objects that
+        predate the subscription), every known path under the prefix with
+        a live freshness floor is held at >= that floor, and no deferred
+        fan-out (``lagging``) touches the prefix.  A catalog that knows
+        nothing under the prefix proves nothing — metadata then routes
+        home (``resync()``/``reattach()`` teach it the home vector).
+        """
+        ranked: List[Tuple[float, int, ReadSource]] = [(
+            self.network.latency_between(client_name, self.home_name), 0,
+            (self.home_name, self.home_store, self.token))]
+        # directory match, not raw string prefix: "home/meta2/x" must not
+        # count against a listing of "home/meta"
+        dirp = prefix if prefix.endswith("/") else prefix + "/"
+        known = set(self.catalog.home_versions) | \
+            set(self.catalog.quorum_versions)
+        need = [(p, self.catalog.freshness_floor(p))
+                for p in known if p.startswith(dirp)]
+        need = [(p, fl) for p, fl in need if fl is not None and fl >= 0]
+        if need and self.catalog.vector_learned:
+            for name, rep in self.replicas.items():
+                if any(p.startswith(dirp) for p in rep.lagging):
+                    continue
+                if all((self.catalog.version_at(p, name) or 0) >= fl
+                       for p, fl in need):
+                    ranked.append((
+                        self.network.latency_between(client_name, name), 1,
+                        (name, rep.store, rep.token)))
+        ranked.sort(key=lambda t: (t[0], t[1]))
+        return [src for _, _, src in ranked]
+
     # ---- write-back fan-out ---------------------------------------------
-    def apply_to_replica(self, name: str, path: str, data: bytes,
-                         version: int, src: Optional[str] = None) -> bool:
-        """Push one store to one replica and collect its acknowledgement.
+    def begin_apply(self, name: str, path: str, data: bytes,
+                    version: int,
+                    src: Optional[str] = None) -> Optional[PendingApply]:
+        """Launch one replica apply as overlapped channel reservations.
 
         ``src`` is the endpoint driving the apply: home during ordinary
         fan-out and resync (third-party transfer, GridFTP-style), or the
         client site when the flusher assembles a quorum around a
-        partitioned home.  The explicit ack RPC rides the same pair, so
+        partitioned home.  The data stripes and the chained ack ride the
+        same pair (the ack reserves ``not_before`` the data lands), so
         per-pair accounting shows where quorum round-trips went.  A
-        partitioned replica is recorded as lagging and skipped — fan-out
-        never blocks or fails the flusher on a WAN fault.
+        partitioned replica is recorded as lagging and yields ``None`` —
+        fan-out never blocks or fails the flusher on a WAN fault.  The
+        clock does not move; pair :meth:`complete_apply` with a
+        ``network.wait`` when the caller needs the ack on the clock.
         """
         rep = self.replicas[name]
         src = src or self.home_name
         try:
-            self.transfer.send(src, name, data)
-            rep.store.put(rep.token, path, data, version=version)
-            self.network.rpc(name, src, "write_ack")   # the ack round-trip
+            group = self.transfer.begin(src, name, data)
+            ack = self.network.transfer(name, src, "write_ack",
+                                        not_before=group.completion)
         except DisconnectedError:
             rep.lagging.add(path)
             self.catalog.drop(path, name)
             self.fanout_deferred += 1
-            return False
-        self.catalog.record(path, name, version)
-        rep.lagging.discard(path)
+            return None
+        return PendingApply(name=name, path=path, data=data,
+                            version=version, src=src, group=group, ack=ack)
+
+    def complete_apply(self, p: PendingApply) -> None:
+        """Land one in-flight apply: real bytes into the replica store,
+        catalog updated, lag cleared.  Does not touch the clock — the
+        caller decides whether this ack is on the critical path."""
+        rep = self.replicas[p.name]
+        rep.store.put(rep.token, p.path, p.data, version=p.version)
+        self.catalog.record(p.path, p.name, p.version)
+        rep.lagging.discard(p.path)
         self.fanout_ok += 1
+
+    def apply_to_replica(self, name: str, path: str, data: bytes,
+                         version: int, src: Optional[str] = None) -> bool:
+        """Blocking apply (anti-entropy repair path): launch, wait the
+        ack onto the clock, land the bytes."""
+        p = self.begin_apply(name, path, data, version, src=src)
+        if p is None:
+            return False
+        self.network.wait(p.ack)
+        self.complete_apply(p)
         return True
+
+    # ---- read repair -----------------------------------------------------
+    def read_repair(self, client_name: str, path: str, data: bytes,
+                    version: int) -> int:
+        """Push freshly-read bytes to replicas observed stale, off the
+        reader's critical path.
+
+        A quorum read that routed past a stale or lagging replica already
+        has the fresh bytes in hand — pushing them back over the same
+        striped-transfer fabric repairs the replica *now* instead of
+        waiting for the next anti-entropy ``resync()``.  The pushes are
+        overlapped channel reservations that are never waited on, so the
+        read's observed latency is untouched.  Guards: never push bytes
+        older than the freshness floor (a stale read must not propagate),
+        and never touch a replica already at or past ``version``.
+        """
+        floor = self.catalog.freshness_floor(path)
+        if floor is not None and version < floor:
+            return 0
+        repaired = 0
+        for name, rep in self.replicas.items():
+            held = self.catalog.version_at(path, name)
+            if held is not None and held >= version:
+                continue
+            if held is None and path not in rep.lagging:
+                continue          # never placed here: placement, not repair
+            p = self.begin_apply(name, path, data, version, src=client_name)
+            if p is None:
+                continue          # still partitioned: stays lagging
+            self.complete_apply(p)
+            repaired += 1
+        self.read_repairs += repaired
+        return repaired
 
     def propagate_delete(self, path: str) -> int:
         ok = 0
@@ -310,6 +426,7 @@ class ReplicaSet:
         for path, hv in vv.items():
             if path not in skip:
                 self.catalog.note_home(path, hv)
+        self.catalog.vector_learned = True
         repaired = 0
         for path, hv in vv.items():
             if path in skip:

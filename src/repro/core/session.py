@@ -97,6 +97,14 @@ def ussh_login(user: str, network: Network, home_root: str,
             rep_ep = Endpoint(rname, network)
             network.set_link(site_name, rname,
                              _dc_replace(network.link, latency_s=latency_s))
+            # replica sites are near the compute site but WAN-far from
+            # home: model the home<->replica path through the site region,
+            # so fan-out applies to different replicas finish at distinct
+            # times (what makes W<N drain time beat W=all under overlap)
+            network.set_link(home_name, rname,
+                             _dc_replace(network.link,
+                                         latency_s=network.link.latency_s +
+                                         latency_s))
             rstore = HomeStore(
                 os.path.join(home_root, ".replicas", rname, user),
                 endpoint=rep_ep)

@@ -1,15 +1,18 @@
 """Striped transfers (paper §3.3): >64 KB moves across up to 12 streams.
 
 ``StripePlan`` is pure logic (tested exhaustively with hypothesis);
-``StripedTransfer`` executes a plan over the simulated transport, moving
-real bytes and charging the virtual clock for the *parallel* stripe time.
+``StripedTransfer`` executes a plan over the simulated transport: each
+stripe is its own concurrent channel reservation, so the elapsed time is
+the max over the stripe channels (not the sum).  ``begin()`` issues the
+reservations without advancing the clock — the async primitive replica
+fan-out pipelines on — while ``send()`` is the blocking wrapper.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.core.transport import Endpoint, Network, KB
+from repro.core.transport import Endpoint, Network, Transfer, KB
 
 STRIPE_THRESHOLD = 64 * KB   # transfers above this are striped
 MIN_BLOCK = 64 * KB          # minimum stripe block size
@@ -56,25 +59,57 @@ def reassemble(plan: StripePlan, parts: List[bytes]) -> bytes:
 
 
 @dataclass
+class TransferGroup:
+    """The in-flight stripes of one logical payload."""
+
+    plan: StripePlan
+    transfers: List[Transfer]
+
+    @property
+    def completion(self) -> float:
+        """When the whole payload has landed: max over stripe channels."""
+        return max(t.completion for t in self.transfers)
+
+
+@dataclass
 class StripedTransfer:
     """Moves payloads between endpoints with striping + clock accounting."""
 
     network: Network
     max_stripes: int = MAX_STRIPES
 
+    def begin(self, src: str, dst: str, payload: bytes, *,
+              encrypted: bool = False, max_stripes: Optional[int] = None,
+              not_before: float = 0.0) -> TransferGroup:
+        """Reserve one channel per stripe; the clock does not move.
+
+        Each stripe is a single stream holding a ``link_bw / n`` share at
+        most, so for equal stripes the group completion matches the old
+        aggregate n-stream model — but the stripes now occupy channels,
+        letting unrelated transfers overlap with them.
+        """
+        plan = plan_stripes(len(payload),
+                            max_stripes=max_stripes or self.max_stripes)
+        n = max(plan.n_streams, 1)
+        transfers = [
+            self.network.transfer(src, dst, "stripe", ln, concurrency=n,
+                                  encrypted=encrypted, not_before=not_before)
+            for _off, ln in plan.stripes
+        ] or [self.network.transfer(src, dst, "stripe", 0,
+                                    encrypted=encrypted,
+                                    not_before=not_before)]
+        # exercise the real data path: split + reassemble must round-trip
+        parts = [payload[off:off + ln] for off, ln in plan.stripes]
+        assert reassemble(plan, parts) == payload
+        return TransferGroup(plan=plan, transfers=transfers)
+
     def send(self, src: str, dst: str, payload: bytes, *,
              encrypted: bool = False,
              max_stripes: Optional[int] = None) -> float:
-        """Returns modeled elapsed seconds for the (parallel) transfer."""
-        plan = plan_stripes(len(payload),
-                            max_stripes=max_stripes or self.max_stripes)
-        # stripes run in parallel: aggregate bandwidth = n * per-stream bw,
-        # capped by the link  ->  latency + total / aggregate.
-        dt = self.network.rpc(src, dst, "striped_send", len(payload),
-                              n_streams=max(plan.n_streams, 1),
-                              encrypted=encrypted)
-        # exercise the real data path: split + reassemble must round-trip
-        parts = [payload[off:off + ln] for off, ln in plan.stripes]
-        out = reassemble(plan, parts)
-        assert out == payload
-        return dt
+        """Blocking transfer; returns the modeled (parallel) elapsed
+        seconds the caller observed."""
+        t0 = self.network.clock
+        group = self.begin(src, dst, payload, encrypted=encrypted,
+                           max_stripes=max_stripes)
+        self.network.wait_all(group.transfers)
+        return self.network.clock - t0

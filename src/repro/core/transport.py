@@ -1,16 +1,31 @@
-"""Simulated WAN transport with a deterministic virtual clock.
+"""Simulated WAN transport with a deterministic per-channel virtual clock.
 
 The container is one CPU process, so the *wire* is modeled while every
 protocol above it (striping, callbacks, leases, auth, WAL replay) is real
 code moving real bytes between in-process endpoints.
 
+Time is event-based: every ``(endpoint, endpoint)`` pair owns a pool of
+*channels* (modeled parallel TCP connections, at most
+``channels_per_pair``), each with a ``busy_until`` time.  ``transfer()``
+*reserves* a channel — start = max(clock, channel busy, ``not_before``) —
+and returns a :class:`Transfer` record carrying start/completion times
+without touching the global clock.  Callers advance the clock explicitly:
+``wait(t)`` to one completion, ``wait_all(ts)`` to the max of a group,
+``drain()`` to the max of everything outstanding.  Overlapped elapsed time
+is therefore the max over channels, not the sum — which is what lets
+striped transfers, replica write fan-out, and pipelined prefetch actually
+overlap on the virtual clock (see ``docs/transport.md``).  ``rpc()``
+remains the synchronous reserve-then-wait wrapper for request/response
+calls (stat, lock, callback probes).
+
 Link model (paper context: TeraGrid 30 Gbps WAN, high RTT):
   * per-stream throughput is TCP-window/RTT limited (``per_stream_bw``) —
     the reason XUFS stripes transfers (§3.3);
-  * the aggregate link caps at ``link_bw``;
-  * every RPC pays one ``latency_s``.
+  * the aggregate link caps at ``link_bw`` (``stream_time`` grants each of
+    k concurrent streams a ``link_bw / k`` share at most);
+  * every transfer pays one ``latency_s``.
 
-Failures: ``partition(a, b[, duration])`` makes RPCs raise
+Failures: ``partition(a, b[, duration])`` makes reservations raise
 :class:`DisconnectedError` until ``heal`` (or until the virtual clock passes
 the deadline) — this is how tests exercise XUFS disconnected operation.
 """
@@ -54,6 +69,8 @@ class LinkModel:
 
     def transfer_time(self, nbytes: int, n_streams: int = 1,
                       encrypted: bool = False) -> float:
+        """Aggregate time for ``nbytes`` over ``n_streams`` modeled as ONE
+        reservation (the legacy ``rpc(n_streams=...)`` path)."""
         if nbytes <= 0:
             return self.latency_s
         if encrypted:
@@ -62,24 +79,73 @@ class LinkModel:
             eff = min(self.per_stream_bw * max(n_streams, 1), self.link_bw)
         return self.latency_s + nbytes / eff
 
+    def stream_time(self, nbytes: int, concurrency: int = 1,
+                    encrypted: bool = False) -> float:
+        """Time for ONE stream carrying ``nbytes`` while ``concurrency``
+        streams share the pair: window-limited per-stream bandwidth, but
+        never more than an even ``link_bw`` share."""
+        if nbytes <= 0:
+            return self.latency_s
+        bw = self.crypto_bw if encrypted else self.per_stream_bw
+        eff = min(bw, self.link_bw / max(concurrency, 1))
+        return self.latency_s + nbytes / eff
+
+
+@dataclass(eq=False)
+class Transfer:
+    """One reserved channel occupancy: the unit of overlapped time.
+
+    ``start``/``completion`` are virtual-clock times fixed at reservation;
+    the global clock advances only when a caller waits on the record.
+    Identity (not value) equality: two byte-identical transfers are still
+    distinct wire events.
+    """
+
+    src: str
+    dst: str
+    method: str
+    nbytes: int
+    start: float
+    completion: float
+    channel: int          # index into the pair's channel pool
+    settled: bool = False   # a caller waited on it (or it aged past clock)
+
+    @property
+    def elapsed(self) -> float:
+        return self.completion - self.start
+
+    @property
+    def pair(self) -> Tuple[str, str]:
+        return (min(self.src, self.dst), max(self.src, self.dst))
+
 
 @dataclass
 class Network:
-    """Endpoint registry + virtual clock + partition schedule.
+    """Endpoint registry + per-channel virtual clock + partition schedule.
 
     The default ``link`` models every pair; ``set_link`` overrides a single
     pair (e.g. a nearby replica site with a fraction of the home RTT).
     Per-endpoint RPC/byte counters let tests and benchmarks assert *where*
-    traffic went, not just how much.
+    traffic went, not just how much.  ``trace`` records reservations
+    ``(src, dst, method, nbytes, channel, start, completion)`` in issue
+    order — the determinism witness (same ops => identical trace) — and
+    keeps the first ``trace_limit`` so a long-lived network stays
+    bounded (truncation is itself deterministic).
     """
 
     link: LinkModel = field(default_factory=LinkModel)
     clock: float = 0.0
     bytes_sent: int = 0
     rpc_count: int = 0
+    channels_per_pair: int = 12       # parallel TCP connections per pair
+    trace_limit: int = 100_000        # reservations recorded (first N)
     _partitions: Dict[Tuple[str, str], float] = field(default_factory=dict)
     _endpoints: Dict[str, "Endpoint"] = field(default_factory=dict)
     _links: Dict[Tuple[str, str], LinkModel] = field(default_factory=dict)
+    _channels: Dict[Tuple[str, str], List[float]] = field(default_factory=dict)
+    _outstanding: List[Transfer] = field(default_factory=list)
+    _prune_watermark: int = 256
+    trace: List[Tuple] = field(default_factory=list)
     per_endpoint_rpcs: Dict[str, int] = field(default_factory=dict)
     per_endpoint_bytes: Dict[str, int] = field(default_factory=dict)
     per_pair_rpcs: Dict[Tuple[str, str], int] = field(default_factory=dict)
@@ -104,7 +170,41 @@ class Network:
 
     # ---- time ----------------------------------------------------------
     def advance(self, seconds: float) -> None:
+        """Push the clock forward unconditionally (lease-expiry tests and
+        workload idle time; data movement should reserve channels)."""
         self.clock += max(seconds, 0.0)
+
+    def wait(self, t: Transfer) -> float:
+        """Block on one transfer: clock lands at its completion (no-op if
+        the clock already passed it).  Returns the completion time."""
+        t.settled = True
+        self.clock = max(self.clock, t.completion)
+        return t.completion
+
+    def wait_all(self, transfers: Optional[List[Transfer]] = None) -> float:
+        """Block on a group (default: everything outstanding): the clock
+        advances to the max completion — the overlapped elapsed time."""
+        targets = self.outstanding() if transfers is None else transfers
+        for t in targets:
+            self.wait(t)
+        return self.clock
+
+    def drain(self) -> float:
+        """Settle every outstanding transfer (fire-and-forget fan-out,
+        pipelined fills) and return the clock."""
+        return self.wait_all()
+
+    def _prune_outstanding(self) -> None:
+        """Drop settled records and ones the clock already passed (waiting
+        on those is a no-op) — fire-and-forget traffic must not grow the
+        list or slow later calls."""
+        self._outstanding = [t for t in self._outstanding
+                             if not t.settled and t.completion > self.clock]
+
+    def outstanding(self) -> List[Transfer]:
+        """Transfers still in flight at the current clock."""
+        self._prune_outstanding()
+        return list(self._outstanding)
 
     # ---- failures --------------------------------------------------------
     def partition(self, a: str, b: str, duration: float = float("inf")):
@@ -125,23 +225,75 @@ class Network:
         return True
 
     # ---- data plane ------------------------------------------------------
-    def rpc(self, src: str, dst: str, method: str, payload_bytes: int = 0,
-            n_streams: int = 1, encrypted: bool = False) -> float:
-        """Account one RPC; returns the modeled elapsed seconds."""
+    def _reserve(self, pair: Tuple[str, str],
+                 not_before: float = 0.0) -> Tuple[int, float]:
+        """Pick a channel deterministically: the lowest-index idle one,
+        else open a new one (up to ``channels_per_pair``), else queue
+        behind the earliest-free channel.  Returns (index, start time)."""
+        chans = self._channels.setdefault(pair, [])
+        t0 = max(self.clock, not_before)
+        for i, busy in enumerate(chans):
+            if busy <= t0:
+                return i, t0
+        if len(chans) < self.channels_per_pair:
+            chans.append(t0)
+            return len(chans) - 1, t0
+        i = min(range(len(chans)), key=lambda j: chans[j])
+        return i, max(chans[i], t0)
+
+    def transfer(self, src: str, dst: str, method: str,
+                 payload_bytes: int = 0, *, n_streams: int = 1,
+                 concurrency: int = 1, encrypted: bool = False,
+                 not_before: float = 0.0) -> Transfer:
+        """Reserve a channel for one transfer; the clock does NOT move.
+
+        ``concurrency`` declares how many sibling streams share the pair
+        right now (per-stripe bandwidth share); ``n_streams > 1`` instead
+        models an n-stream aggregate as one reservation (legacy RPC
+        surface).  ``not_before`` chains causally-dependent transfers
+        (an ack cannot start before its data lands).  The caller later
+        advances the clock via ``wait``/``wait_all``/``drain``.
+        """
         if self.is_partitioned(src, dst):
             raise DisconnectedError(f"{src} <-> {dst} partitioned")
-        dt = self.link_between(src, dst).transfer_time(payload_bytes,
-                                                       n_streams, encrypted)
-        self.advance(dt)
+        link = self.link_between(src, dst)
+        if n_streams > 1:
+            dt = link.transfer_time(payload_bytes, n_streams, encrypted)
+        else:
+            dt = link.stream_time(payload_bytes, concurrency, encrypted)
+        pair = (min(src, dst), max(src, dst))
+        channel, start = self._reserve(pair, not_before)
+        completion = start + dt
+        self._channels[pair][channel] = completion
+        t = Transfer(src=src, dst=dst, method=method, nbytes=payload_bytes,
+                     start=start, completion=completion, channel=channel)
+        if len(self._outstanding) >= self._prune_watermark:
+            self._prune_outstanding()
+            # doubling watermark: amortized O(1) even when nothing prunes
+            self._prune_watermark = max(256, 2 * len(self._outstanding))
+        self._outstanding.append(t)
+        if len(self.trace) < self.trace_limit:
+            self.trace.append((src, dst, method, payload_bytes, channel,
+                               round(start, 9), round(completion, 9)))
         self.bytes_sent += payload_bytes
         self.rpc_count += 1
         self.account(src, payload_bytes)
         self.account(dst, payload_bytes)
-        pair = (min(src, dst), max(src, dst))
         self.per_pair_rpcs[pair] = self.per_pair_rpcs.get(pair, 0) + 1
         self.per_pair_bytes[pair] = \
             self.per_pair_bytes.get(pair, 0) + payload_bytes
-        return dt
+        return t
+
+    def rpc(self, src: str, dst: str, method: str, payload_bytes: int = 0,
+            n_streams: int = 1, encrypted: bool = False) -> float:
+        """Synchronous request/response: reserve a channel and wait on it.
+        Returns the elapsed seconds the caller observed (queueing
+        included) — identical to the pre-channel-clock behavior whenever
+        the pair has an idle channel."""
+        t0 = self.clock
+        self.wait(self.transfer(src, dst, method, payload_bytes,
+                                n_streams=n_streams, encrypted=encrypted))
+        return self.clock - t0
 
     def pair_rpcs(self, a: str, b: str) -> int:
         """RPCs that crossed the ``a <-> b`` link (ack accounting reads

@@ -121,15 +121,15 @@ def test_flusher_crash_then_replay_converges_replicas(rsession):
     with s.client.open("home/out/r.dat", "w") as f:
         f.write(payload)
 
-    real_apply = s.replicas.apply_to_replica
+    real_begin = s.replicas.begin_apply
 
     def crash(name, path, data, version, src=None):
         raise RuntimeError("flusher crashed after home apply")
 
-    s.replicas.apply_to_replica = crash
+    s.replicas.begin_apply = crash
     with pytest.raises(RuntimeError):
         s.client.pump()
-    s.replicas.apply_to_replica = real_apply
+    s.replicas.begin_apply = real_begin
 
     # home applied, replicas did not, record still pending (not marked done)
     assert s.server.store.get(s.token, "home/out/r.dat")[0] == payload
@@ -212,15 +212,15 @@ def test_flusher_crash_after_partial_acks_resumes_from_persisted_acks(
     with s.client.open("home/out/q.dat", "w") as f:
         f.write(payload)
 
-    real_apply = s.replicas.apply_to_replica
+    real_begin = s.replicas.begin_apply
 
     def crash_before_any_replica(name, path, data, version, src=None):
         raise RuntimeError("flusher crashed after the home ack (W-1=1)")
 
-    s.replicas.apply_to_replica = crash_before_any_replica
+    s.replicas.begin_apply = crash_before_any_replica
     with pytest.raises(RuntimeError):
         s.client.pump()
-    s.replicas.apply_to_replica = real_apply
+    s.replicas.begin_apply = real_begin
 
     # the home ack survived the crash, persisted in the WAL
     [rec] = s.client.oplog.pending()
@@ -264,9 +264,7 @@ def test_home_partitioned_whole_write_majority_quorum_still_acks(tmp_path):
 
     # quorum-aware read: replicas are fresh holders despite home silence
     assert sorted(s.replicas.catalog.fresh_holders(path)) == ["r1", "r2"]
-    import os
-    os.remove(s.client.cache.data_path(path))    # evict: force a cold fill
-    os.remove(s.client.cache.attr_path(path))
+    s.client.cache.evict(path)                   # force a cold fill
     with s.client.open(path) as f:
         assert f.read() == payload
     assert s.client.cache.fills_from.get("r1") == 1
@@ -426,6 +424,205 @@ def test_resync_never_clobbers_quorum_acked_replica_bytes(tmp_path):
     assert sorted(s.replicas.catalog.fresh_holders(path)) == ["r1", "r2"]
 
 
+# ---- read repair -----------------------------------------------------------
+
+def test_read_repair_heals_stale_replica_on_quorum_read(rsession):
+    """A cold read that routes past a stale replica pushes the fresh
+    bytes back over the fan-out fabric — no resync() needed."""
+    s = rsession
+    path, _ = seed_and_sync(s)
+    payload2 = b"v2" * 100_000
+    s.client.network.partition("home", "r1")     # r1 misses the fan-out
+    with s.client.open(path, "w") as f:
+        f.write(payload2)
+    assert s.client.pump() == 1
+    assert s.replicas.catalog.fresh_holders(path) == ["r2"]
+    s.client.network.heal("home", "r1")
+
+    s.client.cache.evict(path)
+    with s.client.open(path) as f:               # cold fill from r2
+        assert f.read() == payload2
+    assert s.client.cache.fills_from.get("r2") == 1
+    # r1 was repaired off the read path: fresh bytes, back in the catalog
+    assert s.replicas.read_repairs == 1
+    rep = s.replicas.replicas["r1"]
+    assert rep.store.get(rep.token, path)[0] == payload2
+    assert sorted(s.replicas.catalog.fresh_holders(path)) == ["r1", "r2"]
+    assert path not in rep.lagging
+
+
+def test_read_repair_is_off_the_critical_path(rsession):
+    """The repair push must not charge the reader's clock: a read that
+    repairs costs the same as the r2 fill alone."""
+    s = rsession
+    path, _ = seed_and_sync(s)
+    s.client.network.partition("home", "r1")
+    with s.client.open(path, "w") as f:
+        f.write(b"R" * 200_000)
+    s.client.pump()
+    s.client.network.heal("home", "r1")
+    s.client.cache.evict(path)
+    t0 = s.client.network.clock
+    with s.client.open(path) as f:
+        f.read()
+    elapsed = s.client.network.clock - t0
+    assert s.replicas.read_repairs == 1
+    # fill rides site<->r2 (15 ms link); the site->r1 repair push and its
+    # ack never land on the clock the reader saw
+    fill_time = s.client.network.link_between("site", "r2").stream_time(
+        200_000, concurrency=3)
+    assert elapsed <= fill_time + 3 * 0.015 + 1e-9
+
+
+def test_read_repair_refuses_stale_push(rsession):
+    """Bytes older than the freshness floor must never propagate."""
+    s = rsession
+    path, payload_v1 = seed_and_sync(s)
+    s.server.store.put(s.token, path, b"v2-newer")   # floor moves to v2
+    assert s.replicas.read_repair("site", path, payload_v1, 1) == 0
+    rep = s.replicas.replicas["r1"]
+    assert rep.store.get(rep.token, path)[0] == payload_v1  # untouched
+
+
+# ---- replica-aware metadata (stat / opendir) -------------------------------
+
+def test_stat_routes_to_nearest_fresh_replica(rsession):
+    s = rsession
+    path, _ = seed_and_sync(s)
+    net = s.client.network
+    home_rpcs = net.pair_rpcs("site", "home")
+    r1_rpcs = net.pair_rpcs("site", "r1")
+    st = s.client.stat(path)
+    assert st is not None and st.version == 1
+    assert net.pair_rpcs("site", "home") == home_rpcs   # home never asked
+    assert net.pair_rpcs("site", "r1") == r1_rpcs + 1
+
+
+def test_stat_survives_home_partition_via_replica(rsession):
+    s = rsession
+    path, payload = seed_and_sync(s)
+    s.client.network.partition("site", "home")
+    st = s.client.stat(path)
+    assert st is not None and st.size == len(payload)
+
+
+def test_stat_missing_path_is_authoritative_from_home(rsession):
+    s = rsession
+    assert s.client.stat("home/data/never-existed") is None
+
+
+def test_opendir_routes_to_fresh_replica_with_home_fallback(rsession):
+    s = rsession
+    for i in range(4):
+        s.server.store.put(s.token, f"home/meta/f{i}.c", b"x" * 500)
+    s.replicas.resync()
+    net = s.client.network
+    home_rpcs = net.pair_rpcs("site", "home")
+    stats = s.client.opendir("home/meta")
+    assert len(stats) == 4
+    assert net.pair_rpcs("site", "home") == home_rpcs   # listing from r1
+    assert net.pair_rpcs("site", "r1") >= 1
+    # nearest replica partitioned: degrade to the next source, not error
+    s.client.network.partition("site", "r1")
+    stats = s.client.opendir("home/meta")
+    assert len(stats) == 4
+
+
+def test_opendir_sibling_dir_prefix_does_not_block_replica(rsession):
+    """Directory matching, not raw string prefix: staleness in
+    home/meta2 must not push home/meta listings back to home."""
+    s = rsession
+    for i in range(2):
+        s.server.store.put(s.token, f"home/meta/f{i}.c", b"x" * 400)
+    s.replicas.resync()
+    s.server.store.put(s.token, "home/meta2/late.c", b"y" * 400)  # unsynced
+    s.replicas.replicas["r1"].lagging.add("home/meta2/late.c")
+    net = s.client.network
+    home_rpcs = net.pair_rpcs("site", "home")
+    stats = s.client.opendir("home/meta")
+    assert len(stats) == 2
+    assert net.pair_rpcs("site", "home") == home_rpcs   # replica served it
+
+
+def test_opendir_cold_catalog_with_partial_knowledge_goes_home(tmp_path):
+    """A fresh session's catalog has only seen its own writes — it cannot
+    prove a listing complete (objects may predate the subscription), so
+    metadata stays home until a resync teaches it the home vector."""
+    s1 = login(tmp_path, None, tag="shared")
+    s1.server.store.put(s1.token, "home/meta/old.c", b"o" * 300)
+    # second login over the same home root: fresh (ignorant) catalog
+    s2 = login(tmp_path, {"r1": 0.005}, tag="shared")
+    with s2.client.open("home/meta/new.c", "w") as f:
+        f.write(b"n" * 300)
+    s2.client.sync()                             # new.c fanned out to r1
+    stats = s2.client.opendir("home/meta")       # must include old.c
+    assert {st.path for st in stats} == {"home/meta/old.c",
+                                         "home/meta/new.c"}
+    s2.replicas.resync()                         # vector learned
+    hp = s2.client.network.pair_rpcs("site", "home")
+    stats = s2.client.opendir("home/meta")       # now provably complete
+    assert len(stats) == 2
+    assert s2.client.network.pair_rpcs("site", "home") == hp
+
+
+def test_opendir_falls_back_home_when_replica_listing_incomplete(rsession):
+    """A path the replicas never received keeps listings at home — a
+    replica must not serve a provably-incomplete directory."""
+    s = rsession
+    for i in range(2):
+        s.server.store.put(s.token, f"home/meta2/f{i}.c", b"x" * 500)
+    s.replicas.resync()
+    s.server.store.put(s.token, "home/meta2/late.c", b"y" * 500)  # no resync
+    net = s.client.network
+    home_rpcs = net.pair_rpcs("site", "home")
+    stats = s.client.opendir("home/meta2")
+    assert {st.path for st in stats} >= {"home/meta2/late.c"}
+    assert net.pair_rpcs("site", "home") == home_rpcs + 1
+
+
+# ---- overlapped fan-out: drain time + determinism --------------------------
+
+def test_drain_time_w1_le_majority_lt_all(tmp_path):
+    """Acceptance: with the op set held fixed, overlapped fan-out makes
+    the full drain (not just ack latency) order W=1 <= majority < all."""
+    drain = {}
+    for tag, policy in (("w1", 1), ("majority", "majority"), ("all", "all")):
+        s = qlogin(tmp_path, policy, tag=f"drain-{tag}")
+        for i in range(3):
+            with s.client.open(f"home/out/d{i}.dat", "w") as f:
+                f.write(bytes([i]) * 200_000)
+        t0 = s.client.network.clock
+        assert s.client.sync() == 3
+        drain[tag] = s.client.network.clock - t0
+        # beyond-quorum applies still landed (in the background)
+        for rep in s.replicas.replicas.values():
+            assert rep.store.get(rep.token, "home/out/d2.dat")[0] \
+                == bytes([2]) * 200_000
+    assert drain["w1"] <= drain["majority"] < drain["all"]
+
+
+def test_same_ops_same_clock_and_ack_trace(tmp_path):
+    """Acceptance: two identical runs produce identical channel traces,
+    final clocks, and ack latencies."""
+
+    def one_run(tag):
+        s = qlogin(tmp_path, "majority", tag=tag)
+        for i in range(3):
+            with s.client.open(f"home/out/t{i}.dat", "w") as f:
+                f.write(bytes([i + 1]) * 150_000)
+        s.client.sync()
+        with s.client.open("home/out/t1.dat") as f:
+            f.read()
+        return (s.client.network.clock, list(s.client.ack_wan_s.values()),
+                s.client.network.trace)
+
+    clock1, acks1, trace1 = one_run("det-a")
+    clock2, acks2, trace2 = one_run("det-b")
+    assert clock1 == clock2
+    assert acks1 == acks2
+    assert trace1 == trace2
+
+
 # ---- write fan-out end-to-end ---------------------------------------------
 
 def test_write_back_fan_out_reaches_all_replicas(rsession):
@@ -437,9 +634,7 @@ def test_write_back_fan_out_reaches_all_replicas(rsession):
         assert rep.store.get(rep.token, "home/out/fan.dat")[0] \
             == b"F" * 150_000
     # a later cold read on a fresh client cache hits the nearest replica
-    import os
-    os.remove(s.client.cache.data_path("home/out/fan.dat"))
-    os.remove(s.client.cache.attr_path("home/out/fan.dat"))
+    s.client.cache.evict("home/out/fan.dat")
     with s.client.open("home/out/fan.dat") as f:
         assert f.read() == b"F" * 150_000
     assert s.client.cache.fills_from.get("r1") == 1

@@ -1,0 +1,169 @@
+"""Channel-clock properties: the tentpole invariants of the transport.
+
+Three property families (via the ``_propcheck`` hypothesis shim):
+
+  * per-channel monotonicity — a channel is a serial resource: each
+    reservation starts at or after the previous completion on it;
+  * overlap bound — draining a batch of transfers can never take longer
+    on the virtual clock than running them back-to-back (overlapped
+    elapsed <= serial sum);
+  * determinism — the same op sequence replays to a bit-identical
+    ``Network.trace`` and final clock (the reproducibility contract every
+    benchmark figure rests on).
+
+Plus the striping acceptance check: a striped send's elapsed time equals
+the max over its stripe channels, not the sum.
+"""
+import random
+
+from _propcheck import given, settings, strategies as st
+
+from repro.core.striping import StripedTransfer, MAX_STRIPES
+from repro.core.transport import Endpoint, LinkModel, Network
+
+N_EPS = 4
+
+
+def _mknet(latency: float = 0.010) -> Network:
+    net = Network(link=LinkModel(latency_s=latency))
+    for i in range(N_EPS):
+        Endpoint(f"e{i}", net)
+    return net
+
+
+def _run_ops(net, ops):
+    """Issue a mixed batch: some transfers waited inline, the rest
+    drained at the end (the fan-out shape)."""
+    issued = []
+    for si, di, nbytes, wait_now in ops:
+        src, dst = f"e{si % N_EPS}", f"e{di % N_EPS}"
+        if src == dst:
+            continue
+        t = net.transfer(src, dst, "op", nbytes)
+        issued.append(t)
+        if wait_now:
+            net.wait(t)
+    net.wait_all(issued)
+    return issued
+
+
+OPS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=N_EPS - 1),
+              st.integers(min_value=0, max_value=N_EPS - 1),
+              st.integers(min_value=0, max_value=4 * 1024 * 1024),
+              st.booleans()),
+    min_size=1, max_size=48)
+
+
+@given(OPS)
+@settings(max_examples=50, deadline=None)
+def test_completion_times_monotone_per_channel(ops):
+    """A channel never runs two transfers at once: starts/completions on
+    one (pair, channel) are non-decreasing in issue order."""
+    net = _mknet()
+    _run_ops(net, ops)
+    last_completion = {}
+    for src, dst, _method, _nbytes, ch, start, completion in net.trace:
+        key = ((min(src, dst), max(src, dst)), ch)
+        assert completion >= start
+        prev = last_completion.get(key)
+        if prev is not None:
+            assert start >= prev - 1e-12      # queued behind, never inside
+        last_completion[key] = completion
+
+
+@given(OPS)
+@settings(max_examples=50, deadline=None)
+def test_overlapped_elapsed_le_serial_sum(ops):
+    """Channels only ever help: the drained batch's elapsed virtual time
+    is bounded by the sum of the individual transfer times."""
+    net = _mknet()
+    t0 = net.clock
+    issued = _run_ops(net, ops)
+    elapsed = net.clock - t0
+    serial_sum = sum(t.elapsed for t in issued)
+    assert elapsed <= serial_sum + 1e-9
+    # and the clock landed exactly on the latest completion
+    if issued:
+        assert abs(net.clock - max(t.completion for t in issued)) < 1e-12
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31))
+@settings(max_examples=10, deadline=None)
+def test_same_seed_identical_clock_trace(seed):
+    """Same seed => identical reservation trace and final clock."""
+
+    def one_run():
+        rng = random.Random(seed)
+        net = _mknet()
+        ops = [(rng.randrange(N_EPS), rng.randrange(N_EPS),
+                rng.randrange(2 * 1024 * 1024), rng.random() < 0.5)
+               for _ in range(32)]
+        _run_ops(net, ops)
+        return net.trace, net.clock
+
+    trace1, clock1 = one_run()
+    trace2, clock2 = one_run()
+    assert trace1 == trace2
+    assert clock1 == clock2
+
+
+def test_striped_elapsed_is_max_over_stripes_not_sum():
+    """Acceptance: a striped send's clock charge equals the slowest
+    stripe channel, far below the serial sum of the stripes."""
+    net = _mknet(latency=0.030)
+    xfer = StripedTransfer(net)
+    payload = b"s" * (48 * 1024 * 1024)
+    t0 = net.clock
+    xfer.send("e0", "e1", payload)
+    elapsed = net.clock - t0
+    stripes = [row for row in net.trace if row[2] == "stripe"]
+    assert len(stripes) == MAX_STRIPES
+    durations = [comp - start for *_head, start, comp in stripes]
+    assert abs(elapsed - max(durations)) < 1e-9      # all start together
+    assert elapsed < sum(durations) / (MAX_STRIPES / 2)
+
+
+def test_chained_transfer_starts_after_dependency():
+    """``not_before`` serializes causally-dependent transfers (a write
+    ack cannot start before its data lands) even on an idle channel."""
+    net = _mknet()
+    data = net.transfer("e0", "e1", "data", 1024 * 1024)
+    ack = net.transfer("e1", "e0", "ack", not_before=data.completion)
+    assert ack.start >= data.completion
+    net.drain()
+    assert net.clock == ack.completion
+
+
+def test_fire_and_forget_does_not_accumulate_outstanding():
+    """Transfers nobody waits on must not grow the bookkeeping without
+    bound (nor slow later calls): records the clock has passed age out."""
+    net = _mknet()
+    for _ in range(2000):
+        net.transfer("e0", "e1", "ff", 1000)
+        net.advance(0.5)                 # clock sails past the completion
+    assert len(net._outstanding) < 600
+    assert net.outstanding() == []       # nothing actually in flight
+    assert net.drain() == net.clock      # and drain is a no-op
+
+
+def test_trace_is_bounded_and_deterministically_truncated():
+    net = _mknet()
+    net.trace_limit = 100
+    for _ in range(300):
+        net.wait(net.transfer("e0", "e1", "op", 10))
+    assert len(net.trace) == 100
+    assert net.rpc_count == 300          # accounting unaffected by the cap
+
+
+def test_channel_pool_queues_beyond_cap():
+    """More concurrent transfers than channels: the extras queue behind
+    the earliest-free channel — wave behavior, still deterministic."""
+    net = _mknet()
+    n = net.channels_per_pair
+    ts = [net.transfer("e0", "e1", "op", 1000) for _ in range(n + 3)]
+    starts = sorted(t.start for t in ts)
+    assert starts[0] == starts[n - 1] == net.clock       # first wave together
+    assert starts[n] > net.clock                         # overflow queued
+    assert len({t.channel for t in ts}) == n
+    net.drain()
