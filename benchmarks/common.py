@@ -10,7 +10,7 @@ from __future__ import annotations
 import os
 import sys
 import time
-from typing import Callable, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
@@ -23,3 +23,34 @@ def timed(fn: Callable[[], float]) -> Tuple[float, float]:
 
 def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def endpoint_utilization(net) -> Dict[str, Tuple[float, float, int]]:
+    """Per-endpoint ``(channel_busy_s, busy_fraction, bytes)``.
+
+    ``channel_busy_s`` sums every reservation's wire occupancy at both
+    ends; the fraction divides by the current virtual clock and can
+    exceed 1.0 when channels overlap — the excess IS the fan-out win,
+    while a budgeted endpoint pinned near 1.0 is NIC-bound.
+    """
+    out: Dict[str, Tuple[float, float, int]] = {}
+    horizon = net.clock
+    eps = set(net.per_endpoint_bytes) | set(net.per_endpoint_busy_s)
+    for ep in sorted(eps):
+        busy = net.per_endpoint_busy_s.get(ep, 0.0)
+        frac = busy / horizon if horizon > 0 else 0.0
+        out[ep] = (busy, frac, net.per_endpoint_bytes.get(ep, 0))
+    return out
+
+
+def emit_endpoint_utilization(prefix: str, net,
+                              endpoints: Optional[list] = None) -> None:
+    """One ``<prefix>/util_<endpoint>`` row per endpoint: busy channel
+    seconds, busy fraction of the virtual clock, and bytes moved —
+    the per-endpoint companion to the per-pair rpc/byte counters."""
+    util = endpoint_utilization(net)
+    for ep, (busy, frac, nbytes) in util.items():
+        if endpoints is not None and ep not in endpoints:
+            continue
+        emit(f"{prefix}/util_{ep}", 0.0,
+             f"busy_s={busy:.4f};busy_frac={frac:.2f};bytes={nbytes}")

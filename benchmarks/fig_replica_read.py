@@ -71,6 +71,22 @@ def run(smoke: bool = False) -> int:
                     f"{n} replicas ({modeled[n]:.4f}s) not faster than "
                     f"single-home baseline ({modeled[0]:.4f}s)")
 
+        # route memoization: a second cold sweep over the same paths hits
+        # the per-(client, path) candidate cache (the catalog is quiet),
+        # instead of rebuilding the ranked list per read
+        s = _build_session(2, root, "memo", file_size)
+        _cold_sweep(s, file_size)                    # populate: all misses
+        for i in range(N_FILES):
+            s.client.cache.evict(f"home/data/f{i}.bin")
+        us, _dt = timed(lambda: _cold_sweep(s, file_size))
+        hits, misses = s.replicas.route_hits, s.replicas.route_misses
+        rate = hits / max(hits + misses, 1)
+        emit("replica_read/route_cache_hit_rate", us, f"{rate:.2f}")
+        if hits < N_FILES:
+            failures.append(
+                f"route cache: only {hits} hits over {hits + misses} "
+                f"routes (want >= {N_FILES} on the re-sweep)")
+
         # fault: nearest replica partitioned -> degrade to the 2nd replica
         s = _build_session(2, root, "part2", file_size)
         s.client.network.partition("site", "r1")

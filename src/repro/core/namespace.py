@@ -147,10 +147,13 @@ class XufsClient:
         raise FileNotFoundError(f"{path}: not under any XUFS mount")
 
     # ---- cache fill ------------------------------------------------------
-    def _read_sources(self, m: Mount, path: str) -> List[ReadSource]:
-        """Candidate servers for a cache fill, nearest first, home last."""
+    def _read_sources(self, m: Mount, path: str,
+                      nbytes: Optional[int] = None) -> List[ReadSource]:
+        """Candidate servers for a cache fill, cheapest estimated
+        completion first, home always last-resort.  ``nbytes`` prices
+        the route with the object size when known."""
         if m.replicas is not None:
-            return m.replicas.route(self.name, path)
+            return m.replicas.route(self.name, path, nbytes=nbytes)
         return [(m.server_name, m.store, m.token)]
 
     def _fetch(self, m: Mount, path: str) -> CacheEntry:
@@ -161,7 +164,10 @@ class XufsClient:
         always the terminal authority).
         """
         last_exc: Optional[Exception] = None
-        for server_name, store, token in self._read_sources(m, path):
+        prev = self.cache.lookup(path)   # attr-only entries carry the size
+        hint = prev.stat.size if prev is not None else None
+        for server_name, store, token in self._read_sources(m, path,
+                                                            nbytes=hint):
             try:
                 data, st = store.get(token, path)
                 self.transfer.send(server_name, self.name, data)
@@ -234,7 +240,11 @@ class XufsClient:
             return entry.stat     # served from the hidden attr file
         m = self._mount_for(path)
         last_exc: Optional[DisconnectedError] = None
-        for server_name, store, token in self._read_sources(m, path):
+        # a stat is a 0-byte RPC: price the route with nbytes=0 so NIC
+        # backlog (which cannot delay it) does not steer it off the
+        # nearest replica — same rule route_meta applies to listings
+        for server_name, store, token in self._read_sources(m, path,
+                                                            nbytes=0):
             try:
                 self.network.rpc(self.name, server_name, "stat")
             except DisconnectedError as e:
@@ -373,9 +383,12 @@ class XufsClient:
         # collected in completion order, and the clock advances only to
         # the W-th — acks beyond the quorum settle in the background,
         # which is exactly why a W<N drain beats W=all on elapsed time.
+        # fan-out launches cheapest-estimated-completion first (queue
+        # depth + NIC backlog included), so the W-th ack lands as early
+        # as the current congestion state allows
         src = reps.home_name if home_acked else self.name
         pending = []
-        for name in reps.replicas_by_latency(src):
+        for name in reps.replicas_by_cost(src, len(data)):
             if name in acked:
                 continue
             p = reps.begin_apply(name, rec.path, data, version, src=src)
@@ -412,7 +425,7 @@ class XufsClient:
         self.oplog.retire_superseded(rec.path, rec.seq)
         if m.replicas is not None:
             m.replicas.propagate_delete(rec.path)
-            m.replicas.catalog.quorum_versions.pop(rec.path, None)
+            m.replicas.catalog.forget_quorum(rec.path)
         return True
 
     def pump(self, max_ops: Optional[int] = None) -> int:

@@ -7,8 +7,10 @@ channel clock pipelines them — up to ``Network.channels_per_pair`` (12)
 fills proceed concurrently and the 13th queues behind the earliest-free
 channel — so the elapsed time is the max over channel queues, not the
 serial sum.  That is what makes the paper's Fig. 4 source-build workload
-fast on first touch.  Fills route to the nearest fresh replica when a
-replica fabric is mounted; sources on different pairs overlap fully.
+fast on first touch.  Fills route to the fresh replica with the lowest
+estimated completion when a replica fabric is mounted (so a saturating
+source sheds later fills to the next-cheapest holder); sources on
+different pairs overlap fully.
 """
 from __future__ import annotations
 
@@ -45,9 +47,13 @@ class Prefetcher:
         fetched = 0
         transfers: List[Transfer] = []
         for st in todo:
-            # nearest fresh replica first; home is the terminal source
+            # cheapest fresh source first (the route is priced with the
+            # file's actual size, so queue depth and NIC backlog from
+            # the fills already issued steer later fills away from a
+            # saturating source); home is the terminal source
             data = fresh = src = None
-            for server_name, store, token in cl._read_sources(m, st.path):
+            for server_name, store, token in cl._read_sources(
+                    m, st.path, nbytes=st.size):
                 if cl.network.is_partitioned(cl.name, server_name):
                     continue
                 try:

@@ -11,8 +11,11 @@ recipe (replica catalog + striped transfer):
     from the home store keep the catalog current, so a stale replica drops
     out of the read path the moment home changes (the replica-side
     equivalent of ``cache.INVALID``).
-  * :class:`ReplicaSet` places the replicas, routes reads to the
-    lowest-latency fresh holder (home is always the terminal fallback),
+  * :class:`ReplicaSet` places the replicas, routes reads to the fresh
+    holder with the lowest *estimated completion* — static latency plus
+    channel queue depth plus NIC backlog, so a hammered replica sheds
+    reads to the next-nearest fresh holder (home is always the terminal
+    fallback, whatever its queue) —
     fans writes out home-first-then-replicas under a W-of-N ack policy
     (``write_quorum``; see ``docs/consistency.md``) so a lagging or
     partitioned replica never blocks the client below W — and a
@@ -43,6 +46,17 @@ ReadSource = Tuple[str, HomeStore, str]
 #: the home apply alone is the ack and replica fan-out stays best-effort.
 WritePolicy = Union[int, str]
 
+#: Nominal payload the router prices a candidate with when the caller
+#: does not know the object size yet (a cold ``open`` learns the size
+#: only after choosing a source).  Large enough that NIC backlog and
+#: queue depth dominate latency on a loaded endpoint, small enough that
+#: an idle network still ranks by pure latency.
+ROUTE_PROBE_BYTES = 1024 * 1024
+
+
+#: Shared empty result for directories the catalog knows nothing under.
+_NO_PATHS: Set[str] = frozenset()   # type: ignore[assignment]
+
 
 class ReplicaCatalog:
     """``path -> {endpoint: version}`` plus the home version per path.
@@ -62,14 +76,45 @@ class ReplicaCatalog:
         #: it witnessed, so it cannot prove a listing complete — objects
         #: that predate the subscription may exist at home unseen.
         self.vector_learned = False
+        #: Bumped on every state change — memoized routes key on it.
+        self.gen = 0
+        # per-directory index: "a/b/" -> every known path under it (any
+        # depth), so route_meta never scans the whole catalog per call.
+        # Paths are never unindexed: a deletion keeps its (negative-
+        # version) catalog entry, and consumers filter by freshness floor.
+        self._by_dir: Dict[str, Set[str]] = {}
+        self._indexed: Set[str] = set()
+
+    def _index(self, path: str) -> None:
+        if path in self._indexed:
+            return
+        self._indexed.add(path)
+        parts = path.split("/")
+        for i in range(1, len(parts)):
+            d = "/".join(parts[:i]) + "/"
+            self._by_dir.setdefault(d, set()).add(path)
+
+    def paths_under(self, dir_prefix: str) -> Set[str]:
+        """Known paths under the directory (``dir_prefix`` ends with
+        "/"); directory-boundary match, same as the old linear scan.
+
+        Returns a live READ-ONLY view of the index (an empty frozenset
+        for unknown directories) — callers must copy before mutating,
+        or they corrupt the index behind the catalog's back."""
+        return self._by_dir.get(dir_prefix, _NO_PATHS)
 
     # ---- home side -------------------------------------------------------
     def note_home(self, path: str, version: int) -> None:
+        changed = self.home_versions.get(path) != version
         self.home_versions[path] = version
+        self._index(path)
         qv = self.quorum_versions.get(path)
         if qv is not None and version >= qv:
             # home caught up with the quorum write: single authority again
             del self.quorum_versions[path]
+            changed = True
+        if changed:
+            self.gen += 1
 
     def home_version(self, path: str) -> Optional[int]:
         return self.home_versions.get(path)
@@ -79,6 +124,14 @@ class ReplicaCatalog:
         """A W-of-N quorum acked ``version`` with home unreachable."""
         if version > self.quorum_versions.get(path, 0):
             self.quorum_versions[path] = version
+            self._index(path)
+            self.gen += 1
+
+    def forget_quorum(self, path: str) -> None:
+        """Drop the quorum-side floor (the path was deleted or home
+        re-learned it through another channel)."""
+        if self.quorum_versions.pop(path, None) is not None:
+            self.gen += 1
 
     def freshness_floor(self, path: str) -> Optional[int]:
         """Newest version known home-side or via a quorum ack."""
@@ -90,15 +143,19 @@ class ReplicaCatalog:
 
     # ---- holders ---------------------------------------------------------
     def record(self, path: str, endpoint: str, version: int) -> None:
-        self._holders.setdefault(path, {})[endpoint] = version
+        holders = self._holders.setdefault(path, {})
+        if holders.get(endpoint) != version:
+            holders[endpoint] = version
+            self.gen += 1
 
     def drop(self, path: str, endpoint: Optional[str] = None) -> None:
         if endpoint is None:
-            self._holders.pop(path, None)
+            if self._holders.pop(path, None) is not None:
+                self.gen += 1
             return
         holders = self._holders.get(path)
-        if holders is not None:
-            holders.pop(endpoint, None)
+        if holders is not None and holders.pop(endpoint, None) is not None:
+            self.gen += 1
 
     def version_at(self, path: str, endpoint: str) -> Optional[int]:
         return self._holders.get(path, {}).get(endpoint)
@@ -152,18 +209,35 @@ class ReplicaSet:
 
     def __init__(self, network: Network, home_name: str,
                  home_store: HomeStore, token: str,
-                 write_quorum: WritePolicy = 1):
+                 write_quorum: WritePolicy = 1,
+                 queue_aware: bool = True):
         self.network = network
         self.home_name = home_name
         self.home_store = home_store
         self.token = token
         self.write_quorum = write_quorum
+        #: Rank read sources / fan-out targets by estimated completion
+        #: (latency + channel queue + NIC backlog).  False restores the
+        #: static nearest-by-latency ranking — on an idle network the
+        #: two produce identical orders, so this is a load-shedding
+        #: feature flag, not a semantics change.
+        self.queue_aware = queue_aware
         self.replicas: Dict[str, Replica] = {}
         self.catalog = ReplicaCatalog()
         self.transfer = StripedTransfer(network)
         self.fanout_ok = 0
         self.fanout_deferred = 0
         self.read_repairs = 0
+        # memoized per-(client, path) fresh-source candidates, valid for
+        # one catalog generation; the O(1) lagging membership check and
+        # the ranking by current queue state stay per-call (they are
+        # O(candidates) — the rebuild of the fresh-holder set was the
+        # per-read cost), so lagging mutations and congestion changes
+        # take effect immediately without an invalidation hook.
+        self._route_cache: Dict[Tuple[str, str], List[str]] = {}
+        self._route_cache_gen = -1
+        self.route_hits = 0
+        self.route_misses = 0
         home_store.subscribe(self._on_home_change)
 
     # ---- write-ack policy ------------------------------------------------
@@ -197,11 +271,21 @@ class ReplicaSet:
                 best = v
         return best + 1
 
-    def replicas_by_latency(self, src: str) -> List[str]:
-        """Replica names nearest-first from ``src`` — a W<N quorum should
-        collect its acks over the cheapest links."""
+    def _route_cost(self, src: str, dst: str, nbytes: int) -> float:
+        """What one routing candidate costs right now: estimated
+        completion (latency + channel queue + NIC backlog) when
+        queue-aware, static link latency otherwise."""
+        if self.queue_aware:
+            return self.network.estimated_completion(src, dst, nbytes)
+        return self.network.latency_between(src, dst)
+
+    def replicas_by_cost(self, src: str, nbytes: int = 0) -> List[str]:
+        """Replica names cheapest-first from ``src`` under the current
+        queue/NIC state — the flusher launches fan-out in this order so
+        the W-th ack lands as early as possible.  Partitioned pairs
+        estimate to ``inf`` and sort last (they defer anyway)."""
         return sorted(self.replicas,
-                      key=lambda n: self.network.latency_between(src, n))
+                      key=lambda n: self._route_cost(src, n, nbytes))
 
     # ---- catalog feed (rides the home callback channel) ------------------
     def _on_home_change(self, path: str, st: ObjectStat) -> None:
@@ -249,20 +333,46 @@ class ReplicaSet:
         return rep
 
     # ---- read routing ----------------------------------------------------
-    def route(self, client_name: str, path: str) -> List[ReadSource]:
-        """Read sources ordered by link latency; home always present.
+    def _fresh_sources(self, client_name: str, path: str) -> List[str]:
+        """Memoized replica candidates (fresh holders placed in this
+        set) for one (client, path); valid for exactly one catalog
+        generation — any note/record/drop clears the cache wholesale.
+        Lagging is deliberately NOT baked in: it is an O(1) membership
+        test the caller applies per-call, so every mutation spelling on
+        a plain ``lagging`` set takes effect immediately."""
+        if self.catalog.gen != self._route_cache_gen:
+            self._route_cache.clear()
+            self._route_cache_gen = self.catalog.gen
+        key = (client_name, path)
+        names = self._route_cache.get(key)
+        if names is not None:
+            self.route_hits += 1
+            return names
+        self.route_misses += 1
+        names = [ep for ep in self.catalog.fresh_holders(path)
+                 if ep in self.replicas]
+        self._route_cache[key] = names
+        return names
 
-        Ties go to home (authoritative).  The client walks the list,
-        falling back on :class:`DisconnectedError`.
+    def route(self, client_name: str, path: str,
+              nbytes: Optional[int] = None) -> List[ReadSource]:
+        """Read sources cheapest-first by estimated completion (static
+        latency when ``queue_aware`` is off); home always present.
+
+        ``nbytes`` prices the candidates with the object size when the
+        caller knows it (prefetch does); otherwise a nominal probe size
+        stands in.  Cost ties go to home (authoritative).  The client
+        walks the list, falling back on :class:`DisconnectedError`.
         """
+        probe = ROUTE_PROBE_BYTES if nbytes is None else nbytes
         ranked: List[Tuple[float, int, ReadSource]] = [(
-            self.network.latency_between(client_name, self.home_name), 0,
+            self._route_cost(client_name, self.home_name, probe), 0,
             (self.home_name, self.home_store, self.token))]
-        for ep in self.catalog.fresh_holders(path):
-            rep = self.replicas.get(ep)
-            if rep is None or path in rep.lagging:
+        for ep in self._fresh_sources(client_name, path):
+            rep = self.replicas[ep]
+            if path in rep.lagging:
                 continue
-            ranked.append((self.network.latency_between(client_name, ep), 1,
+            ranked.append((self._route_cost(client_name, ep, probe), 1,
                            (ep, rep.store, rep.token)))
         ranked.sort(key=lambda t: (t[0], t[1]))
         return [src for _, _, src in ranked]
@@ -270,7 +380,9 @@ class ReplicaSet:
     # ---- metadata routing ------------------------------------------------
     def route_meta(self, client_name: str, prefix: str) -> List[ReadSource]:
         """Metadata read sources (``stat`` via listing / ``opendir``)
-        nearest-first; home always present as the authoritative fallback.
+        cheapest-first by the same estimated-completion rule as data
+        reads; home always present as the authoritative fallback
+        regardless of its queue depth.
 
         A replica may serve a *listing* only when the catalog can prove it
         complete and fresh for the prefix: the full home version vector
@@ -283,15 +395,14 @@ class ReplicaSet:
         home (``resync()``/``reattach()`` teach it the home vector).
         """
         ranked: List[Tuple[float, int, ReadSource]] = [(
-            self.network.latency_between(client_name, self.home_name), 0,
+            self._route_cost(client_name, self.home_name, 0), 0,
             (self.home_name, self.home_store, self.token))]
         # directory match, not raw string prefix: "home/meta2/x" must not
-        # count against a listing of "home/meta"
+        # count against a listing of "home/meta" — served by the
+        # catalog's per-directory index, not a scan of every known path
         dirp = prefix if prefix.endswith("/") else prefix + "/"
-        known = set(self.catalog.home_versions) | \
-            set(self.catalog.quorum_versions)
         need = [(p, self.catalog.freshness_floor(p))
-                for p in known if p.startswith(dirp)]
+                for p in sorted(self.catalog.paths_under(dirp))]
         need = [(p, fl) for p, fl in need if fl is not None and fl >= 0]
         if need and self.catalog.vector_learned:
             for name, rep in self.replicas.items():
@@ -300,7 +411,7 @@ class ReplicaSet:
                 if all((self.catalog.version_at(p, name) or 0) >= fl
                        for p, fl in need):
                     ranked.append((
-                        self.network.latency_between(client_name, name), 1,
+                        self._route_cost(client_name, name, 0), 1,
                         (name, rep.store, rep.token)))
         ranked.sort(key=lambda t: (t[0], t[1]))
         return [src for _, _, src in ranked]

@@ -67,20 +67,28 @@ def ussh_login(user: str, network: Network, home_root: str,
                site_name: str = "site",
                mounts: Optional[Dict[str, List[str]]] = None,
                replica_sites: Optional[Dict[str, float]] = None,
-               write_quorum: "WritePolicy" = 1) -> Session:
+               write_quorum: "WritePolicy" = 1,
+               nic_budgets: Optional[Dict[str, float]] = None,
+               queue_aware: bool = True) -> Session:
     """Login from the personal system into a site; mount the home space.
 
     ``mounts`` maps namespace prefix -> localized sub-prefixes.
     ``replica_sites`` maps replica endpoint name -> one-way latency (s)
     from the compute site; each named site gets a read replica of the
     home space registered in the session's :class:`ReplicaSet`, and cache
-    fills route to the nearest fresh replica.
+    fills route to the cheapest fresh replica.
     ``write_quorum`` sets the write-ack policy over home + replicas: an
     explicit W, or ``"majority"`` / ``"all"``.  The default (1) is the
     legacy policy — the home apply alone acks and fan-out is best-effort.
+    ``nic_budgets`` maps endpoint name -> aggregate NIC bytes/s
+    (``Network.set_nic_budget``); unlisted endpoints stay uncapped.
+    ``queue_aware`` toggles estimated-completion routing on the replica
+    set (False restores static nearest-by-latency ranking).
     """
     home_ep = Endpoint(home_name, network)
     Endpoint(site_name, network)
+    for ep_name, budget in (nic_budgets or {}).items():
+        network.set_nic_budget(ep_name, budget)
     kp = KeyPhrase.generate()
     store = HomeStore(os.path.join(home_root, user), endpoint=home_ep,
                       keyphrase=kp)
@@ -92,7 +100,8 @@ def ussh_login(user: str, network: Network, home_root: str,
     if replica_sites:
         replicas = ReplicaSet(network=network, home_name=home_name,
                               home_store=store, token=token,
-                              write_quorum=write_quorum)
+                              write_quorum=write_quorum,
+                              queue_aware=queue_aware)
         for rname, latency_s in replica_sites.items():
             rep_ep = Endpoint(rname, network)
             network.set_link(site_name, rname,

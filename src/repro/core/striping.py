@@ -6,6 +6,12 @@ stripe is its own concurrent channel reservation, so the elapsed time is
 the max over the stripe channels (not the sum).  ``begin()`` issues the
 reservations without advancing the clock — the async primitive replica
 fan-out pipelines on — while ``send()`` is the blocking wrapper.
+
+Every stripe reservation individually charges the per-endpoint NIC
+budget at both ends (``Network._charge_nic``), so striping a payload
+12-wide cannot exceed the shared uplink: the stripes serialize through
+the NIC at the budget rate and the group completion stretches to the
+NIC backlog exactly as one aggregate transfer would.
 """
 from __future__ import annotations
 

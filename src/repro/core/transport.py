@@ -25,6 +25,17 @@ Link model (paper context: TeraGrid 30 Gbps WAN, high RTT):
     k concurrent streams a ``link_bw / k`` share at most);
   * every transfer pays one ``latency_s``.
 
+NIC model: an endpoint may carry an optional aggregate bandwidth budget
+(``set_nic_budget``) shared by its uplink and downlink across ALL pairs.
+Each reservation additionally serializes its payload through both
+endpoints' NICs at the budget rate; when concurrent reservations across
+different pairs oversubscribe an endpoint, completion stretches to the
+NIC backlog (``docs/transport.md`` has the math).  With no budget set
+the reservation math is bit-for-bit the pure link formula.
+``estimated_completion()`` exposes the same arithmetic — static latency
++ channel queue depth + NIC backlog — without reserving, which is what
+queue-aware replica routing ranks candidates by.
+
 Failures: ``partition(a, b[, duration])`` makes reservations raise
 :class:`DisconnectedError` until ``heal`` (or until the virtual clock passes
 the deadline) — this is how tests exercise XUFS disconnected operation.
@@ -145,9 +156,12 @@ class Network:
     _channels: Dict[Tuple[str, str], List[float]] = field(default_factory=dict)
     _outstanding: List[Transfer] = field(default_factory=list)
     _prune_watermark: int = 256
+    nic_budgets: Dict[str, float] = field(default_factory=dict)
+    _nic_free: Dict[str, float] = field(default_factory=dict)
     trace: List[Tuple] = field(default_factory=list)
     per_endpoint_rpcs: Dict[str, int] = field(default_factory=dict)
     per_endpoint_bytes: Dict[str, int] = field(default_factory=dict)
+    per_endpoint_busy_s: Dict[str, float] = field(default_factory=dict)
     per_pair_rpcs: Dict[Tuple[str, str], int] = field(default_factory=dict)
     per_pair_bytes: Dict[Tuple[str, str], int] = field(default_factory=dict)
 
@@ -167,6 +181,42 @@ class Network:
 
     def latency_between(self, a: str, b: str) -> float:
         return self.link_between(a, b).latency_s
+
+    # ---- per-endpoint NIC budgets ---------------------------------------
+    def set_nic_budget(self, endpoint: str,
+                       bytes_per_s: Optional[float]) -> None:
+        """Cap ``endpoint``'s aggregate NIC bandwidth (uplink + downlink
+        share it, across ALL pairs).  ``None`` removes the cap — the
+        default, under which reservations reproduce the pure link
+        formula bit-for-bit."""
+        if bytes_per_s is None:
+            self.nic_budgets.pop(endpoint, None)
+            # drop the serializer backlog too: an uncapped interval
+            # drains the queue, so a later re-applied budget must not
+            # inherit phantom queueing from before the cap was lifted
+            self._nic_free.pop(endpoint, None)
+            return
+        if bytes_per_s <= 0:
+            raise ValueError(f"NIC budget must be > 0: {bytes_per_s}")
+        self.nic_budgets[endpoint] = bytes_per_s
+
+    def nic_budget(self, endpoint: str) -> Optional[float]:
+        return self.nic_budgets.get(endpoint)
+
+    def _charge_nic(self, endpoint: str, start: float, nbytes: int,
+                    completion: float) -> float:
+        """Serialize ``nbytes`` through ``endpoint``'s NIC at the budget
+        rate (FIFO in reservation order — deterministic): the payload's
+        NIC service occupies ``[max(backlog, start), +nbytes/budget)``,
+        so aggregate bytes through the endpoint can never exceed
+        budget x busy-span.  Returns the (possibly stretched)
+        completion."""
+        bw = self.nic_budgets.get(endpoint)
+        if bw is None or nbytes <= 0:
+            return completion
+        free = max(self._nic_free.get(endpoint, 0.0), start) + nbytes / bw
+        self._nic_free[endpoint] = free
+        return completion if free <= completion else free
 
     # ---- time ----------------------------------------------------------
     def advance(self, seconds: float) -> None:
@@ -225,21 +275,51 @@ class Network:
         return True
 
     # ---- data plane ------------------------------------------------------
-    def _reserve(self, pair: Tuple[str, str],
-                 not_before: float = 0.0) -> Tuple[int, float]:
-        """Pick a channel deterministically: the lowest-index idle one,
-        else open a new one (up to ``channels_per_pair``), else queue
-        behind the earliest-free channel.  Returns (index, start time)."""
-        chans = self._channels.setdefault(pair, [])
+    def _peek_reserve(self, pair: Tuple[str, str],
+                      not_before: float = 0.0) -> Tuple[int, float, bool]:
+        """The channel :meth:`_reserve` would pick, without reserving:
+        the lowest-index idle one, else a new one (up to
+        ``channels_per_pair``), else the earliest-free channel.  Returns
+        (index, start time, whether the channel would be new)."""
+        chans = self._channels.get(pair, ())
         t0 = max(self.clock, not_before)
         for i, busy in enumerate(chans):
             if busy <= t0:
-                return i, t0
+                return i, t0, False
         if len(chans) < self.channels_per_pair:
-            chans.append(t0)
-            return len(chans) - 1, t0
+            return len(chans), t0, True
         i = min(range(len(chans)), key=lambda j: chans[j])
-        return i, max(chans[i], t0)
+        return i, max(chans[i], t0), False
+
+    def _reserve(self, pair: Tuple[str, str],
+                 not_before: float = 0.0) -> Tuple[int, float]:
+        """Pick a channel deterministically and claim it."""
+        i, start, new = self._peek_reserve(pair, not_before)
+        if new:
+            self._channels.setdefault(pair, []).append(start)
+        return i, start
+
+    def estimated_completion(self, src: str, dst: str, nbytes: int = 0,
+                             *, not_before: float = 0.0) -> float:
+        """Completion time a single-stream transfer reserved *now* would
+        get — static link time + channel queue depth + NIC backlog at
+        both endpoints — WITHOUT reserving anything.  A partitioned pair
+        estimates to ``inf``.  This is the queue-aware routing metric:
+        for an idle network it reduces to ``clock + latency +
+        nbytes/eff``, so ranking by it degenerates to the static
+        nearest-by-latency order."""
+        if self.is_partitioned(src, dst):
+            return float("inf")
+        pair = (min(src, dst), max(src, dst))
+        _i, start, _new = self._peek_reserve(pair, not_before)
+        completion = start + self.link_between(src, dst).stream_time(nbytes)
+        if nbytes > 0:
+            for ep in (src, dst):
+                bw = self.nic_budgets.get(ep)
+                if bw is not None:
+                    backlog = max(self._nic_free.get(ep, 0.0), start)
+                    completion = max(completion, backlog + nbytes / bw)
+        return completion
 
     def transfer(self, src: str, dst: str, method: str,
                  payload_bytes: int = 0, *, n_streams: int = 1,
@@ -264,6 +344,10 @@ class Network:
         pair = (min(src, dst), max(src, dst))
         channel, start = self._reserve(pair, not_before)
         completion = start + dt
+        # both NICs serialize the payload at their budget rate; an
+        # oversubscribed endpoint stretches completion to its backlog
+        completion = self._charge_nic(src, start, payload_bytes, completion)
+        completion = self._charge_nic(dst, start, payload_bytes, completion)
         self._channels[pair][channel] = completion
         t = Transfer(src=src, dst=dst, method=method, nbytes=payload_bytes,
                      start=start, completion=completion, channel=channel)
@@ -279,6 +363,11 @@ class Network:
         self.rpc_count += 1
         self.account(src, payload_bytes)
         self.account(dst, payload_bytes)
+        dur = completion - start
+        self.per_endpoint_busy_s[src] = \
+            self.per_endpoint_busy_s.get(src, 0.0) + dur
+        self.per_endpoint_busy_s[dst] = \
+            self.per_endpoint_busy_s.get(dst, 0.0) + dur
         self.per_pair_rpcs[pair] = self.per_pair_rpcs.get(pair, 0) + 1
         self.per_pair_bytes[pair] = \
             self.per_pair_bytes.get(pair, 0) + payload_bytes

@@ -1,0 +1,182 @@
+"""Per-endpoint NIC budget properties (the congestion-model invariants).
+
+Three property families (via the ``_propcheck`` hypothesis shim):
+
+  * conservation — with a budget ``B`` on every endpoint, the bytes
+    attributed to any endpoint never exceed ``B x elapsed`` once the
+    batch drains (the NIC serializer cannot be oversubscribed);
+  * no-budget equivalence — with budgets unset the reservation math is
+    bit-for-bit the pure link formula (the PR 3 trace), and an
+    effectively-infinite budget reproduces the unbudgeted trace exactly;
+  * determinism — same ops => identical trace and final clock still
+    holds with oversubscribed budgets in play.
+
+Plus directed checks: oversubscription stretches completion to the NIC
+backlog, and ``estimated_completion`` agrees with the reservation it
+predicts.
+"""
+import random
+
+from _propcheck import given, settings, strategies as st
+
+from repro.core.striping import StripedTransfer
+from repro.core.transport import Endpoint, LinkModel, MB, Network
+
+N_EPS = 4
+
+
+def _mknet(latency: float = 0.010, budget=None) -> Network:
+    net = Network(link=LinkModel(latency_s=latency))
+    for i in range(N_EPS):
+        Endpoint(f"e{i}", net)
+        if budget is not None:
+            net.set_nic_budget(f"e{i}", budget)
+    return net
+
+
+def _run_ops(net, ops):
+    issued = []
+    for si, di, nbytes, wait_now in ops:
+        src, dst = f"e{si % N_EPS}", f"e{di % N_EPS}"
+        if src == dst:
+            continue
+        t = net.transfer(src, dst, "op", nbytes)
+        issued.append(t)
+        if wait_now:
+            net.wait(t)
+    net.wait_all(issued)
+    return issued
+
+
+OPS = st.lists(
+    st.tuples(st.integers(min_value=0, max_value=N_EPS - 1),
+              st.integers(min_value=0, max_value=N_EPS - 1),
+              st.integers(min_value=0, max_value=4 * 1024 * 1024),
+              st.booleans()),
+    min_size=1, max_size=48)
+
+
+@given(OPS)
+@settings(max_examples=50, deadline=None)
+def test_endpoint_bytes_never_exceed_budget_times_elapsed(ops):
+    """Conservation: an endpoint with budget B moves at most B x elapsed
+    bytes — the serializer stretches completions instead of letting a
+    fan-out exceed the shared uplink."""
+    budget = 20 * MB
+    net = _mknet(budget=budget)
+    _run_ops(net, ops)
+    elapsed = net.drain()
+    for ep, nbytes in net.per_endpoint_bytes.items():
+        assert nbytes <= budget * elapsed * (1 + 1e-9) + 1e-6, \
+            (ep, nbytes, budget * elapsed)
+
+
+@given(OPS)
+@settings(max_examples=50, deadline=None)
+def test_no_budget_reservation_is_pure_link_formula(ops):
+    """Budgets of None reproduce the PR 3 reservation math bit-for-bit:
+    every trace row's duration equals ``link.stream_time(nbytes)``."""
+    net = _mknet()
+    _run_ops(net, ops)
+    for src, dst, _m, nbytes, _ch, start, completion in net.trace:
+        want = net.link_between(src, dst).stream_time(nbytes)
+        assert abs((completion - start) - want) < 1e-9
+
+
+@given(OPS)
+@settings(max_examples=25, deadline=None)
+def test_infinite_budget_trace_identical_to_unbudgeted(ops):
+    """A budget too large to bind must not perturb a single reservation:
+    the trace and final clock match the unbudgeted run exactly."""
+    plain = _mknet()
+    _run_ops(plain, ops)
+    capped = _mknet(budget=float("inf"))
+    _run_ops(capped, ops)
+    assert plain.trace == capped.trace
+    assert plain.clock == capped.clock
+
+
+@given(st.integers(min_value=0, max_value=2 ** 31))
+@settings(max_examples=10, deadline=None)
+def test_same_ops_identical_trace_under_oversubscription(seed):
+    """Determinism survives the NIC model: same ops => identical trace
+    and clock even with every endpoint's budget binding."""
+
+    def one_run():
+        rng = random.Random(seed)
+        net = _mknet(budget=10 * MB)
+        ops = [(rng.randrange(N_EPS), rng.randrange(N_EPS),
+                rng.randrange(2 * 1024 * 1024), rng.random() < 0.5)
+               for _ in range(32)]
+        _run_ops(net, ops)
+        return net.trace, net.clock
+
+    trace1, clock1 = one_run()
+    trace2, clock2 = one_run()
+    assert trace1 == trace2
+    assert clock1 == clock2
+
+
+def test_oversubscription_stretches_completion_to_nic_backlog():
+    """Two concurrent transfers from one endpoint to DIFFERENT pairs:
+    each fits its link alone, but the shared NIC serializes them — the
+    second completes a full nbytes/budget after the first's service."""
+    budget = 10 * MB
+    net = _mknet(budget=budget)
+    n = 4 * MB
+    t1 = net.transfer("e0", "e1", "a", n)
+    t2 = net.transfer("e0", "e2", "b", n)
+    assert abs(t1.completion - (n / budget)) < 1e-9        # NIC-bound
+    assert abs(t2.completion - 2 * (n / budget)) < 1e-9    # queued behind
+    net.drain()
+    assert net.per_endpoint_bytes["e0"] <= budget * net.clock * (1 + 1e-9)
+
+
+def test_striped_payload_charges_shared_nic_once():
+    """Striping 12-wide must not multiply NIC capacity: the striped
+    group completes no earlier than total_bytes / budget."""
+    budget = 25 * MB
+    net = _mknet(latency=0.030, budget=budget)
+    xfer = StripedTransfer(net)
+    payload = b"s" * (48 * MB)
+    group = xfer.begin("e0", "e1", payload)
+    assert group.completion >= len(payload) / budget - 1e-9
+    net.drain()
+    assert net.per_endpoint_bytes["e0"] <= budget * net.clock * (1 + 1e-9)
+
+
+def test_estimated_completion_matches_actual_reservation():
+    """The routing estimator prices a candidate with exactly the
+    completion the reservation would get (single stream, unpartitioned),
+    including channel queueing and NIC backlog."""
+    net = _mknet(budget=10 * MB)
+    # preload queue + NIC backlog deterministically
+    for _ in range(3):
+        net.transfer("e0", "e1", "bg", 2 * MB)
+    for nbytes in (0, 1000, 1 * MB, 8 * MB):
+        est = net.estimated_completion("e0", "e1", nbytes)
+        got = net.transfer("e0", "e1", "probe", nbytes)
+        assert abs(est - got.completion) < 1e-9, (nbytes, est, got)
+    net.drain()
+
+
+def test_estimated_completion_is_read_only_and_inf_when_partitioned():
+    net = _mknet(budget=10 * MB)
+    before = (dict(net._nic_free), net.clock, len(net.trace))
+    net.estimated_completion("e0", "e1", 1 * MB)
+    assert (dict(net._nic_free), net.clock, len(net.trace)) == before
+    net.partition("e0", "e1")
+    assert net.estimated_completion("e0", "e1", 1 * MB) == float("inf")
+
+
+def test_removing_budget_drops_backlog():
+    """Lifting a cap drains the serializer: a budget re-applied later
+    must not inherit phantom queueing from before the uncapped interval."""
+    net = _mknet(budget=10 * MB)
+    net.transfer("e0", "e1", "bg", 200 * MB)      # 20 s of backlog
+    net.set_nic_budget("e0", None)
+    net.set_nic_budget("e1", None)
+    net.drain()
+    net.set_nic_budget("e0", 10 * MB)
+    t = net.transfer("e0", "e2", "probe", 1 * MB)
+    assert t.completion <= net.clock + 1 * MB / (10 * MB) + 1e-9

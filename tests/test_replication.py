@@ -638,3 +638,126 @@ def test_write_back_fan_out_reaches_all_replicas(rsession):
     with s.client.open("home/out/fan.dat") as f:
         assert f.read() == b"F" * 150_000
     assert s.client.cache.fills_from.get("r1") == 1
+
+
+# ---- congestion-aware routing + route memoization --------------------------
+
+def test_route_candidates_memoized_with_hit_counter(rsession):
+    """Repeated routes for one (client, path) reuse the memoized
+    fresh-source candidates instead of rebuilding the ranked list."""
+    s = rsession
+    path, _ = seed_and_sync(s)
+    first = [name for name, _store, _tok in s.replicas.route("site", path)]
+    misses0 = s.replicas.route_misses
+    hits0 = s.replicas.route_hits
+    for _ in range(5):
+        again = [n for n, _s, _t in s.replicas.route("site", path)]
+        assert again == first
+    assert s.replicas.route_hits == hits0 + 5
+    assert s.replicas.route_misses == misses0
+
+
+def test_route_cache_invalidated_by_catalog_change(rsession):
+    """A home-side write (catalog note) must evict memoized routes: the
+    stale replicas drop out of the read path immediately."""
+    s = rsession
+    path, _ = seed_and_sync(s)
+    assert [n for n, _s, _t in s.replicas.route("site", path)][0] == "r1"
+    s.replicas.route("site", path)            # populate + hit
+    s.server.store.put(s.token, path, b"v2")  # note_home bumps catalog gen
+    ranked = [n for n, _s, _t in s.replicas.route("site", path)]
+    assert ranked == ["home"]                 # replicas stale: home only
+    assert s.replicas.catalog.fresh_holders(path) == []
+
+
+def test_route_cache_invalidated_by_lagging_change(rsession):
+    """Direct lagging mutations (deferred fan-out, tests) take effect
+    immediately — a lagging replica must leave the route NOW (lagging
+    is checked per-call, never baked into the memoized candidates)."""
+    s = rsession
+    path, _ = seed_and_sync(s)
+    assert [n for n, _s, _t in s.replicas.route("site", path)][0] == "r1"
+    s.replicas.replicas["r1"].lagging.add(path)
+    ranked = [n for n, _s, _t in s.replicas.route("site", path)]
+    assert "r1" not in ranked
+    s.replicas.replicas["r1"].lagging.discard(path)
+    assert [n for n, _s, _t in s.replicas.route("site", path)][0] == "r1"
+
+
+def test_queue_aware_route_sheds_saturated_replica(rsession):
+    """The headline: a hammered replica (NIC backlog) sheds reads to the
+    next-nearest fresh holder; static routing keeps hitting it."""
+    s = rsession
+    path, _ = seed_and_sync(s)
+    net = s.client.network
+    net.set_nic_budget("r1", 10 * MB)
+    # hammer r1's NIC from elsewhere: 200 MB of backlog = 20 s
+    net.transfer("r1", "home", "background", 200 * MB)
+    ranked = [n for n, _s, _t in s.replicas.route("site", path,
+                                                  nbytes=1 * MB)]
+    assert ranked == ["r2", "home", "r1"]     # shed off the hot replica
+    s.replicas.queue_aware = False            # static ranking ignores load
+    ranked = [n for n, _s, _t in s.replicas.route("site", path,
+                                                  nbytes=1 * MB)]
+    assert ranked[0] == "r1"
+    net.drain()
+
+
+def test_queue_aware_idle_network_matches_static_order(rsession):
+    """With nothing in flight and no budgets, estimated-completion
+    ranking degenerates to the static nearest-by-latency order."""
+    s = rsession
+    path, _ = seed_and_sync(s)
+    aware = [n for n, _s, _t in s.replicas.route("site", path)]
+    s.replicas.queue_aware = False
+    static = [n for n, _s, _t in s.replicas.route("site", path)]
+    assert aware == static == ["r1", "r2", "home"]
+
+
+def test_flusher_fanout_prefers_uncongested_replica(tmp_path):
+    """Write fan-out launch order is queue-aware: with r1's NIC
+    saturated, the W-th ack is collected from r2 first."""
+    s = login(tmp_path, {"r1": 0.005, "r2": 0.015})
+    net = s.client.network
+    net.set_nic_budget("r1", 10 * MB)
+    net.transfer("r1", "home", "background", 500 * MB)   # 50 s backlog
+    order = s.replicas.replicas_by_cost("home", 150_000)
+    assert order == ["r2", "r1"]
+    net.drain()
+
+
+def test_route_meta_uses_directory_index(rsession):
+    """The per-directory index answers route_meta without scanning the
+    whole catalog, and matches the old directory-boundary semantics."""
+    s = rsession
+    for i in range(3):
+        s.server.store.put(s.token, f"home/idx/f{i}.c", b"x" * 100)
+    s.server.store.put(s.token, "home/idx2/other.c", b"y" * 100)
+    s.replicas.resync()
+    cat = s.replicas.catalog
+    assert cat.paths_under("home/idx/") == {f"home/idx/f{i}.c"
+                                            for i in range(3)}
+    assert cat.paths_under("home/") >= {"home/idx2/other.c"}
+    assert cat.paths_under("home/idx") == frozenset()   # not a dir prefix
+    # deletions keep their index entry but fail the freshness filter
+    s.server.store.delete(s.token, "home/idx/f0.c")
+    assert "home/idx/f0.c" in cat.paths_under("home/idx/")
+    assert cat.freshness_floor("home/idx/f0.c") < 0
+
+
+def test_lagging_bulk_mutators_invalidate_routes(rsession):
+    """Every set-mutation spelling on a replica's lagging set (update,
+    |=, -=, pop) is honored by the next route, not just add/discard —
+    lagging is a per-call check on a plain set."""
+    s = rsession
+    path, _ = seed_and_sync(s)
+    rep = s.replicas.replicas["r1"]
+    assert [n for n, _s, _t in s.replicas.route("site", path)][0] == "r1"
+    rep.lagging.update({path})
+    assert "r1" not in [n for n, _s, _t in s.replicas.route("site", path)]
+    rep.lagging -= {path}
+    assert [n for n, _s, _t in s.replicas.route("site", path)][0] == "r1"
+    rep.lagging |= {path}
+    assert "r1" not in [n for n, _s, _t in s.replicas.route("site", path)]
+    assert rep.lagging.pop() == path
+    assert [n for n, _s, _t in s.replicas.route("site", path)][0] == "r1"
