@@ -15,6 +15,29 @@ from typing import Callable, Dict, Optional, Tuple
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def star_fabric(home_root: str, site_root: str, *, home: str = "home",
+                site: str = "site", latency_s: Optional[float] = None,
+                replica_latencies: Optional[Dict[str, float]] = None,
+                nic_budgets: Optional[Dict[str, float]] = None,
+                extra_sites=(), extra_links=()):
+    """The benchmarks' canonical topology as a declarative spec: one
+    compute ``site``, one ``home`` behind ``latency_s``, and replica
+    sites at their site-relative latencies (the home<->replica path is
+    left to the fabric's latency-composition rule).  ``extra_sites`` /
+    ``extra_links`` graft incast clients and the like onto the star.
+    Returns the built ``Fabric``; callers pass a ``ReplicaPolicy`` to
+    ``fabric.login`` themselves — policy is theirs, topology is this.
+    """
+    from repro.core import Fabric, FabricSpec, LinkModel
+
+    link = LinkModel() if latency_s is None else LinkModel(latency_s=latency_s)
+    return Fabric(FabricSpec.star(home_root, site_root, home=home, site=site,
+                                  replica_latencies=replica_latencies,
+                                  nic_budgets=nic_budgets, link=link,
+                                  extra_sites=extra_sites,
+                                  extra_links=extra_links))
+
+
 def timed(fn: Callable[[], float]) -> Tuple[float, float]:
     t0 = time.perf_counter()
     derived = fn()

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import tempfile
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, star_fabric, timed
 
 MB = 1024 * 1024
 SIZES = [1 * MB, 16 * MB, 64 * MB, 256 * MB, 1024 * MB]
@@ -17,11 +17,10 @@ SMOKE_SIZES = [1 * MB, 4 * MB]
 
 
 def run(smoke: bool = False) -> None:
-    from repro.core import Network, ussh_login
-
     with tempfile.TemporaryDirectory() as td:
-        net = Network()
-        s = ussh_login("bench", net, td + "/h", td + "/s")
+        fab = star_fabric(td + "/h", td + "/s")
+        net = fab.network
+        s = fab.login("bench")
         for size in (SMOKE_SIZES if smoke else SIZES):
             label = f"{size // MB}M"
             payload = b"\x5a" * size

@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import tempfile
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, star_fabric, timed
 
 N_FILES = 24
 SUBDIRS = 5
@@ -41,14 +41,14 @@ def _build_pass(s, net):
 
 
 def run(smoke: bool = False) -> None:
-    from repro.core import Network, ussh_login
     from repro.core import prefetch as pf_mod
 
     n_runs = 2 if smoke else 5    # run 1 cold, the rest warm cache hits
     # ---- with parallel prefetch (XUFS default) --------------------------
     with tempfile.TemporaryDirectory() as td:
-        net = Network()
-        s = ussh_login("bench", net, td + "/h", td + "/s")
+        fab = star_fabric(td + "/h", td + "/s")
+        net = fab.network
+        s = fab.login("bench")
         _populate(s)
         for run_i in range(1, n_runs + 1):
             us, wan_s = timed(lambda: _build_pass(s, net))
@@ -57,8 +57,9 @@ def run(smoke: bool = False) -> None:
 
     # ---- without prefetch (serial first-open fetches) --------------------
     with tempfile.TemporaryDirectory() as td:
-        net = Network()
-        s = ussh_login("bench", net, td + "/h", td + "/s")
+        fab = star_fabric(td + "/h", td + "/s")
+        net = fab.network
+        s = fab.login("bench")
         _populate(s)
         old = pf_mod.Prefetcher.prefetch_small
         pf_mod.Prefetcher.prefetch_small = lambda self, p, st: 0

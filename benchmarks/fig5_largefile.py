@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import tempfile
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, star_fabric, timed
 
 GB = 1024 * 1024 * 1024
 SIZE = 1 * GB
@@ -17,12 +17,11 @@ SMOKE_SIZE = 8 * 1024 * 1024      # striped path still exercised
 
 
 def run(smoke: bool = False) -> None:
-    from repro.core import Network, ussh_login
-
     size = SMOKE_SIZE if smoke else SIZE
     with tempfile.TemporaryDirectory() as td:
-        net = Network()
-        s = ussh_login("bench", net, td + "/h", td + "/s")
+        fab = star_fabric(td + "/h", td + "/s")
+        net = fab.network
+        s = fab.login("bench")
         payload = b"line\n" * (size // 5)
         s.server.store.put(s.token, "home/data/big.dat", payload)
 

@@ -35,13 +35,14 @@ import os
 import shutil
 import sys
 import tempfile
-from dataclasses import replace as _dc_replace
 
 if __name__ == "__main__":
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import emit, emit_endpoint_utilization, timed
+from benchmarks.common import (
+    emit, emit_endpoint_utilization, star_fabric, timed,
+)
 
 HOME_LATENCY = 0.060
 REPLICA_SITES = {"r1": 0.005, "r2": 0.015}
@@ -51,24 +52,27 @@ HOT_PATH = "home/hot/model.bin"
 
 def _build(root: str, tag: str, n_clients: int, size: int,
            budget, queue_aware: bool):
-    """One incast universe: home + 2 replicas + N client endpoints."""
-    from repro.core import Endpoint, LinkModel, MB, Network, ussh_login
+    """One incast universe: home + 2 replicas + N client endpoints, all
+    declared up front in one spec."""
+    from repro.core import LinkSpec, ReplicaPolicy, SiteSpec
 
-    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
-    s = ussh_login("bench", net, f"{root}/home-{tag}", f"{root}/site-{tag}",
-                   replica_sites=dict(REPLICA_SITES),
-                   queue_aware=queue_aware)
+    clients = [f"c{i}" for i in range(n_clients)]
+    fab = star_fabric(
+        f"{root}/home-{tag}", f"{root}/site-{tag}",
+        latency_s=HOME_LATENCY, replica_latencies=REPLICA_SITES,
+        extra_sites=tuple(SiteSpec(c) for c in clients),
+        extra_links=tuple(LinkSpec(c, rname, latency_s=lat)
+                          for c in clients
+                          for rname, lat in REPLICA_SITES.items()))
+    s = fab.login("bench",
+                  replicas=ReplicaPolicy(sites=tuple(REPLICA_SITES),
+                                         queue_aware=queue_aware))
     s.server.store.put(s.token, HOT_PATH, b"H" * size)
     s.replicas.resync()
-    clients = []
-    for i in range(n_clients):
-        cname = f"c{i}"
-        Endpoint(cname, net)
-        for rname, lat in REPLICA_SITES.items():
-            net.set_link(cname, rname,
-                         _dc_replace(net.link, latency_s=lat))
-        clients.append(cname)
+    net = fab.network
     if budget is not None:
+        # budgets arm AFTER the seed resync: the incast measures steady
+        # state, not a replica fill charged against the cap
         for ep in SERVERS:
             net.set_nic_budget(ep, budget)
     return s, clients

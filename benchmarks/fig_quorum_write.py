@@ -46,7 +46,7 @@ if __name__ == "__main__":
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, star_fabric, timed
 
 HOME_LATENCY = 0.060
 REPLICA_SITES = {"r1": 0.005, "r2": 0.015}
@@ -55,11 +55,14 @@ POLICIES = (("w1", 1), ("majority", "majority"), ("all", "all"))
 
 
 def _login(policy, root: str, tag: str):
-    from repro.core import LinkModel, Network, ussh_login
+    from repro.core import ReplicaPolicy
 
-    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
-    return ussh_login("bench", net, f"{root}/home-{tag}", f"{root}/site-{tag}",
-                      replica_sites=dict(REPLICA_SITES), write_quorum=policy)
+    fab = star_fabric(f"{root}/home-{tag}", f"{root}/site-{tag}",
+                      latency_s=HOME_LATENCY,
+                      replica_latencies=REPLICA_SITES)
+    return fab.login("bench",
+                     replicas=ReplicaPolicy(sites=tuple(REPLICA_SITES),
+                                            write_quorum=policy))
 
 
 def _write_files(s, n_files: int, size: int, prefix: str) -> list:

@@ -22,7 +22,7 @@ if __name__ == "__main__":
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, star_fabric, timed
 
 N_FILES = 8
 HOME_LATENCY = 0.060
@@ -30,12 +30,14 @@ REPLICA_COUNTS = (0, 1, 2, 4)
 
 
 def _build_session(n_replicas: int, root: str, tag: str, file_size: int):
-    from repro.core import LinkModel, Network, ussh_login
+    from repro.core import ReplicaPolicy
 
-    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
     sites = {f"r{i + 1}": 0.004 * (i + 1) for i in range(n_replicas)}
-    s = ussh_login("bench", net, f"{root}/home-{tag}", f"{root}/site-{tag}",
-                   replica_sites=sites or None)
+    fab = star_fabric(f"{root}/home-{tag}", f"{root}/site-{tag}",
+                      latency_s=HOME_LATENCY, replica_latencies=sites)
+    s = fab.login("bench",
+                  replicas=ReplicaPolicy(sites=tuple(sites))
+                  if sites else None)
     for i in range(N_FILES):
         s.server.store.put(s.token, f"home/data/f{i}.bin", b"x" * file_size)
     if s.replicas is not None:

@@ -26,7 +26,6 @@ from __future__ import annotations
 import os
 import sys
 import tempfile
-from dataclasses import replace as _dc_replace
 
 if __name__ == "__main__":
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
@@ -43,19 +42,31 @@ SMOKE_SHARED_FILES = 4
 
 
 def _private_census(n_users: int) -> int:
-    from repro.core import AuthError, LinkModel, Network, ussh_login
+    """N private namespaces on ONE declared fabric: the whole multi-user
+    topology is a single FabricSpec, and each user is one login."""
+    from repro.core import (
+        AuthError, Fabric, FabricSpec, LinkModel, LinkSpec, ReplicaPolicy,
+        SiteSpec,
+    )
 
     failures = 0
     with tempfile.TemporaryDirectory() as td:
-        net = Network(link=LinkModel(latency_s=0.060))
+        sites, links = [], []
+        for i in range(n_users):
+            sites += [SiteSpec(f"home{i}", root=f"{td}/h{i}"),
+                      SiteSpec(f"site{i}", root=f"{td}/s{i}"),
+                      SiteSpec(f"u{i}r1"), SiteSpec(f"u{i}r2")]
+            links += [LinkSpec(f"site{i}", f"u{i}r1", latency_s=0.005),
+                      LinkSpec(f"site{i}", f"u{i}r2", latency_s=0.015)]
+        fab = Fabric(FabricSpec(sites=tuple(sites), links=tuple(links),
+                                link=LinkModel(latency_s=0.060)))
         sessions = []
 
         def make_users():
             for i in range(n_users):
-                s = ussh_login(
-                    f"user{i}", net, f"{td}/h{i}", f"{td}/s{i}",
-                    home_name=f"home{i}", site_name=f"site{i}",
-                    replica_sites={f"u{i}r1": 0.005, f"u{i}r2": 0.015})
+                s = fab.login(
+                    f"user{i}", home=f"home{i}", site=f"site{i}",
+                    replicas=ReplicaPolicy(sites=(f"u{i}r1", f"u{i}r2")))
                 s.server.store.put(s.token, f"home/private_{i}.dat",
                                    b"secret" * 100)
                 s.replicas.resync()          # private bytes now replicated
@@ -102,50 +113,48 @@ def _private_census(n_users: int) -> int:
 
 def _shared_mount_census(n_clients: int, n_files: int) -> int:
     """Many clients mount ONE home space; sweep cold reads with and
-    without replica placement and report where the fills landed."""
+    without replica placement and report where the fills landed.  The
+    owner logs in once; every further reader is a ``Fabric.attach`` —
+    sharing a namespace is API, not copy-pasted wiring."""
     from repro.core import (
-        Endpoint, HomeStore, LinkModel, Network, ReplicaSet, XufsClient,
+        Fabric, FabricSpec, LinkModel, LinkSpec, MountSpec, ReplicaPolicy,
+        SiteSpec,
     )
-    from repro.core.transport import respond
 
     size = 32 * 1024
     failures = 0
     results = {}
     with tempfile.TemporaryDirectory() as td:
         for n_replicas in (0, 2):
-            net = Network(link=LinkModel(latency_s=0.060))
-            home_ep = Endpoint("proj_home", net)
-            store = HomeStore(f"{td}/proj-{n_replicas}", endpoint=home_ep)
-            token = store.authenticate(
-                lambda ch: respond(store.keyphrase, ch))
+            cnames = [f"csite{n_replicas}_{c}" for c in range(n_clients)]
+            sites = [SiteSpec("proj_home", root=f"{td}/proj-{n_replicas}")]
+            sites += [SiteSpec(f"pr{r}") for r in range(n_replicas)]
+            sites += [SiteSpec(cn, root=f"{td}/c{n_replicas}-{cn}")
+                      for cn in cnames]
+            # replica sites sit near the clients; pin the home<->replica
+            # path at the WAN default rather than the composition rule
+            links = [LinkSpec("proj_home", f"pr{r}", latency_s=0.060)
+                     for r in range(n_replicas)]
+            links += [LinkSpec(cn, f"pr{r}", latency_s=0.004 * (r + 1))
+                      for cn in cnames for r in range(n_replicas)]
+            fab = Fabric(FabricSpec(sites=tuple(sites), links=tuple(links),
+                                    link=LinkModel(latency_s=0.060)))
+            mounts = (MountSpec("proj/"),)
+            policy = ReplicaPolicy(
+                sites=tuple(f"pr{r}" for r in range(n_replicas))) \
+                if n_replicas else None
+            owner = fab.login("proj", home="proj_home", site=cnames[0],
+                              mounts=mounts, replicas=policy)
+            store, token = owner.server.store, owner.token
             for i in range(n_files):
                 store.put(token, f"proj/shared_{i}.dat", b"s" * size)
-            replicas = None
-            if n_replicas:
-                replicas = ReplicaSet(net, "proj_home", store, token)
-                for r in range(n_replicas):
-                    rep_ep = Endpoint(f"pr{r}", net)
-                    rstore = HomeStore(f"{td}/rep{n_replicas}-{r}",
-                                       endpoint=rep_ep)
-                    replicas.add_replica(f"pr{r}", rstore)
-                replicas.resync()
-            clients = []
-            for c in range(n_clients):
-                cname = f"csite{n_replicas}_{c}"
-                Endpoint(cname, net)
-                for r in range(n_replicas):
-                    net.set_link(cname, f"pr{r}",
-                                 _dc_replace(net.link,
-                                             latency_s=0.004 * (r + 1)))
-                cl = XufsClient(cname, net,
-                                cache_root=f"{td}/c{n_replicas}-{c}/cache",
-                                oplog_root=f"{td}/c{n_replicas}-{c}/oplog",
-                                owner=f"reader{c}")
-                cl.mount("proj/", "proj_home", store, token,
-                         replicas=replicas)
-                clients.append(cl)
+            if owner.replicas is not None:
+                owner.replicas.resync()
+            clients = [fab.attach(owner, cname, owner=f"reader{c}",
+                                  mounts=mounts)
+                       for c, cname in enumerate(cnames)]
 
-            def sweep(clients=clients, net=net):
+            def sweep(clients=clients, net=fab.network):
                 c0 = net.clock
                 for cl in clients:
                     for i in range(n_files):

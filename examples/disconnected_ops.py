@@ -17,15 +17,21 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import Network, ussh_login, DisconnectedError
+from repro.core import (
+    DisconnectedError, Fabric, FabricSpec, MountSpec, SiteSpec,
+)
 
 
 def main() -> None:
     with tempfile.TemporaryDirectory() as td:
-        net = Network()
-        s = ussh_login("ewalker", net, td + "/laptop", td + "/pod",
-                       home_name="laptop", site_name="pod",
-                       mounts={"home/": ["home/scratch/raw/"]})
+        fabric = Fabric(FabricSpec(sites=(
+            SiteSpec("laptop", root=td + "/laptop"),
+            SiteSpec("pod", root=td + "/pod"),
+        )))
+        net = fabric.network
+        s = fabric.login("ewalker", home="laptop", site="pod",
+                         mounts=[MountSpec("home/",
+                                           ("home/scratch/raw/",))])
         tok = s.token
 
         # laptop: project files

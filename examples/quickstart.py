@@ -12,7 +12,7 @@ import tempfile
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec, MountSpec, SiteSpec
 from repro.config import RunConfig, ShapeConfig, OptimConfig
 from repro.configs import get_tiny_config
 from repro.checkpoint import CheckpointManager
@@ -23,10 +23,15 @@ from repro.train import Trainer
 
 def main() -> None:
     with tempfile.TemporaryDirectory() as td:
-        # 1. USSH login: personal file server at "home", pod site mounts it
-        net = Network()
-        s = ussh_login("scientist", net, td + "/home", td + "/site",
-                       mounts={"home/": ["home/scratch/"]})
+        # 1. declare the topology, then USSH login: personal file server
+        #    at "home", pod site mounts it (scratch/ stays pod-local)
+        fabric = Fabric(FabricSpec(sites=(
+            SiteSpec("home", root=td + "/home"),
+            SiteSpec("site", root=td + "/site"),
+        )))
+        net = fabric.network
+        s = fabric.login("scientist",
+                         mounts=[MountSpec("home/", ("home/scratch/",))])
 
         # 2. input data lives in the home space; the pod reads it through
         #    the whole-object cache + prefetcher

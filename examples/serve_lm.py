@@ -12,7 +12,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
 
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec, SiteSpec
 from repro.checkpoint import CheckpointManager
 from repro.configs import get_tiny_config
 from repro.models import init_params
@@ -21,8 +21,12 @@ from repro.serve.engine import ServeEngine, Request
 
 def main() -> None:
     with tempfile.TemporaryDirectory() as td:
-        net = Network()
-        s = ussh_login("server", net, td + "/home", td + "/site")
+        fabric = Fabric(FabricSpec(sites=(
+            SiteSpec("home", root=td + "/home"),
+            SiteSpec("site", root=td + "/site"),
+        )))
+        net = fabric.network
+        s = fabric.login("server")
         cfg = get_tiny_config("qwen3-8b").replace(param_dtype="bfloat16")
 
         # publisher side: push weights into the home store

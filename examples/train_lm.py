@@ -18,7 +18,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.config import (
     ModelConfig, RunConfig, ShapeConfig, OptimConfig, DENSE,
 )
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec, MountSpec, SiteSpec
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import SyntheticCorpus, DataPipeline
 from repro.train import Trainer, FaultMonitor, FaultEvent
@@ -49,9 +49,13 @@ def main() -> None:
     print(f"model: {cfg.param_count() / 1e6:.1f}M params")
 
     with tempfile.TemporaryDirectory() as td:
-        net = Network()
-        s = ussh_login("trainer", net, td + "/home", td + "/site",
-                       mounts={"home/": ["home/scratch/"]})
+        fabric = Fabric(FabricSpec(sites=(
+            SiteSpec("home", root=td + "/home"),
+            SiteSpec("site", root=td + "/site"),
+        )))
+        net = fabric.network
+        s = fabric.login("trainer",
+                         mounts=[MountSpec("home/", ("home/scratch/",))])
         SyntheticCorpus(s.client, "home/data", seed=0,
                         vocab=cfg.vocab_size,
                         shard_tokens=max(p["seq"] * p["batch"] * 4, 8192)

@@ -1,4 +1,10 @@
-"""XUFS core fabric: the paper's contribution as a composable library."""
+"""XUFS core fabric: the paper's contribution as a composable library.
+
+The documented public surface is ``__all__``; ``tests/test_public_api.py``
+holds it stable.  Topology is declared with the spec layer
+(:class:`FabricSpec` et al., ``docs/fabric.md``); ``ussh_login`` survives
+only as a deprecated shim over it.
+"""
 from repro.core.transport import (  # noqa: F401
     Network, Endpoint, LinkModel, Transfer, KeyPhrase, DisconnectedError,
     AuthError, QuorumNotReachedError, KB, MB, GB,
@@ -18,3 +24,27 @@ from repro.core.lease import LeaseManager  # noqa: F401
 from repro.core.namespace import XufsClient, XufsFile, Mount  # noqa: F401
 from repro.core.prefetch import Prefetcher  # noqa: F401
 from repro.core.session import Session, UserFileServer, ussh_login  # noqa: F401
+from repro.core.fabric import (  # noqa: F401
+    Fabric, FabricSpec, LinkSpec, MountSpec, ReplicaPolicy, SiteSpec,
+)
+
+__all__ = [
+    # declarative topology / session surface (docs/fabric.md)
+    "Fabric", "FabricSpec", "SiteSpec", "LinkSpec", "ReplicaPolicy",
+    "MountSpec", "Session", "UserFileServer", "ussh_login",
+    # transport
+    "Network", "Endpoint", "LinkModel", "Transfer", "KeyPhrase",
+    "DisconnectedError", "AuthError", "QuorumNotReachedError",
+    "KB", "MB", "GB",
+    # striping
+    "plan_stripes", "reassemble", "StripePlan", "StripedTransfer",
+    "TransferGroup", "STRIPE_THRESHOLD", "MIN_BLOCK", "MAX_STRIPES",
+    # stores / cache / WAL
+    "HomeStore", "ObjectStat", "CacheSpace", "CacheEntry", "MetaOpQueue",
+    "OpRecord",
+    # coherency / replication / leases
+    "NotificationManager", "PendingApply", "Replica", "ReplicaCatalog",
+    "ReplicaSet", "WritePolicy", "LeaseManager",
+    # client
+    "XufsClient", "XufsFile", "Mount", "Prefetcher",
+]

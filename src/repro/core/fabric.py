@@ -1,0 +1,393 @@
+"""Declarative fabric spec: one topology API for sites, links, replicas,
+and multi-user sessions.
+
+XUFS's value proposition (paper §3) is that a researcher declares *what*
+their private distributed namespace looks like and the system handles the
+wide-area plumbing.  This module is that declaration:
+
+  * :class:`FabricSpec` — a frozen, shareable description of a topology:
+    the sites (endpoints, optionally with filesystem roots and NIC
+    budgets), the links between them (latency override or a full
+    :class:`LinkModel`), and the default link every undeclared pair
+    rides.  Specs validate at construction, so a typo'd replica name or
+    a negative budget fails before any wire is modeled.
+  * :class:`Fabric` — the runtime built from a spec.  It owns the
+    :class:`Network`, registers every endpoint, applies links and NIC
+    budgets exactly once, and hands out sessions via :meth:`Fabric.login`
+    — so multiple users/sessions compose on one shared topology as
+    first-class API instead of each call site hand-rolling endpoints and
+    links (which is what ``ussh_login`` used to force on every caller).
+  * :class:`ReplicaPolicy` / :class:`MountSpec` — per-session policy
+    (which declared sites replicate a home space, the W-of-N write-ack
+    rule, queue-aware routing, a forward-looking capacity seam) and the
+    namespace mounts, separated from the topology they run on — replica
+    *policy* apart from transport *mechanism*, per the GridFTP replica
+    management line.
+
+Latency composition: a replica site is near the compute site but
+WAN-far from home, so when a login places a replica whose ``home <->
+replica`` link was never declared, the fabric resolves it to
+
+    default link latency  +  declared site <-> replica latency
+
+(the rule ``ussh_login`` used to hide in its body).  Declaring an
+explicit :class:`LinkSpec` for the pair overrides the composition.
+
+``ussh_login`` (``repro.core.session``) survives as a thin deprecated
+shim that assembles a :class:`FabricSpec` from its keyword arguments and
+delegates here — bit-identical wiring, one ``DeprecationWarning``.
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field, replace as _dc_replace
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.namespace import XufsClient
+from repro.core.replication import ReplicaSet, WritePolicy
+from repro.core.session import Session, UserFileServer, _authenticate
+from repro.core.store import HomeStore
+from repro.core.transport import Endpoint, KeyPhrase, LinkModel, Network
+
+
+def _pair(a: str, b: str) -> Tuple[str, str]:
+    return (min(a, b), max(a, b))
+
+
+@dataclass(frozen=True)
+class SiteSpec:
+    """One named endpoint of the fabric.
+
+    ``root`` is the local filesystem directory backing stores/caches at
+    the site (required on sites that host a home space or a client;
+    replica sites store under the home site's root).  ``nic_budget``
+    caps the endpoint's aggregate NIC bytes/s (``None`` = uncapped, the
+    default — see ``docs/transport.md``).
+    """
+
+    name: str
+    root: Optional[str] = None
+    nic_budget: Optional[float] = None
+
+    def __post_init__(self) -> None:
+        if not self.name:
+            raise ValueError("SiteSpec needs a non-empty name")
+        if self.nic_budget is not None and self.nic_budget <= 0:
+            raise ValueError(
+                f"site {self.name!r}: NIC budget must be > 0, "
+                f"got {self.nic_budget}")
+
+
+@dataclass(frozen=True)
+class LinkSpec:
+    """One declared pair link: a latency override of the fabric default,
+    or a full :class:`LinkModel` replacement (exactly one of the two)."""
+
+    a: str
+    b: str
+    latency_s: Optional[float] = None
+    link: Optional[LinkModel] = None
+
+    def __post_init__(self) -> None:
+        if self.a == self.b:
+            raise ValueError(f"link {self.a!r} <-> itself is meaningless")
+        if (self.latency_s is None) == (self.link is None):
+            raise ValueError(
+                f"link {self.a!r}<->{self.b!r}: give exactly one of "
+                "latency_s or link")
+        if self.latency_s is not None and self.latency_s < 0:
+            raise ValueError(
+                f"link {self.a!r}<->{self.b!r}: latency must be >= 0")
+
+    @property
+    def pair(self) -> Tuple[str, str]:
+        return _pair(self.a, self.b)
+
+
+@dataclass(frozen=True)
+class ReplicaPolicy:
+    """Replica *policy* for one session's home space, apart from the
+    topology mechanism it runs on.
+
+    ``sites`` names declared fabric sites that hold read replicas;
+    ``write_quorum`` is the W-of-N ack rule (explicit W, ``"majority"``,
+    or ``"all"`` — see ``docs/consistency.md``); ``queue_aware`` toggles
+    estimated-completion routing.  ``capacity_bytes`` is the
+    forward-looking placement/eviction seam (ROADMAP): today it only
+    validates and is recorded on the :class:`ReplicaSet`; no eviction
+    happens yet.
+    """
+
+    sites: Tuple[str, ...] = ()
+    write_quorum: WritePolicy = 1
+    queue_aware: bool = True
+    capacity_bytes: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "sites", tuple(self.sites))
+        if len(set(self.sites)) != len(self.sites):
+            raise ValueError(f"duplicate replica sites: {self.sites}")
+        if isinstance(self.write_quorum, str):
+            if self.write_quorum not in ("majority", "all"):
+                raise ValueError(
+                    f"write_quorum must be an int, 'majority' or 'all': "
+                    f"{self.write_quorum!r}")
+        elif int(self.write_quorum) < 1:
+            raise ValueError(f"write_quorum must be >= 1: "
+                             f"{self.write_quorum}")
+        if self.capacity_bytes is not None and self.capacity_bytes <= 0:
+            raise ValueError(
+                f"capacity_bytes must be > 0 (or None = unbounded): "
+                f"{self.capacity_bytes}")
+
+
+@dataclass(frozen=True)
+class MountSpec:
+    """One namespace mount: a prefix plus its *localized* sub-prefixes —
+    directories whose new data never ships back to home (paper §3.1)."""
+
+    prefix: str
+    localized: Tuple[str, ...] = ()
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "localized", tuple(self.localized))
+        if not self.prefix.endswith("/"):
+            raise ValueError(
+                f"mount prefix must end with '/': {self.prefix!r}")
+        for sub in self.localized:
+            if not sub.startswith(self.prefix):
+                raise ValueError(
+                    f"localized {sub!r} is not under mount {self.prefix!r}")
+
+
+@dataclass(frozen=True)
+class FabricSpec:
+    """A declarative, shareable topology: sites, links, and the default
+    :class:`LinkModel` every undeclared pair rides."""
+
+    sites: Tuple[SiteSpec, ...] = ()
+    links: Tuple[LinkSpec, ...] = ()
+    link: LinkModel = field(default_factory=LinkModel)
+
+    def __post_init__(self) -> None:
+        object.__setattr__(self, "sites", tuple(self.sites))
+        object.__setattr__(self, "links", tuple(self.links))
+        names = [s.name for s in self.sites]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate site names: {dupes}")
+        known = set(names)
+        pairs = set()
+        for ls in self.links:
+            for end in (ls.a, ls.b):
+                if end not in known:
+                    raise ValueError(
+                        f"link {ls.a!r}<->{ls.b!r} references undeclared "
+                        f"site {end!r}")
+            if ls.pair in pairs:
+                raise ValueError(f"duplicate link {ls.a!r}<->{ls.b!r}")
+            pairs.add(ls.pair)
+
+    def site(self, name: str) -> SiteSpec:
+        for s in self.sites:
+            if s.name == name:
+                return s
+        raise KeyError(f"{name!r} is not a declared fabric site "
+                       f"(have: {sorted(s.name for s in self.sites)})")
+
+    @classmethod
+    def star(cls, home_root: Optional[str], site_root: Optional[str], *,
+             home: str = "home", site: str = "site",
+             replica_latencies: Optional[Dict[str, float]] = None,
+             nic_budgets: Optional[Dict[str, float]] = None,
+             link: Optional[LinkModel] = None,
+             extra_sites: Sequence[SiteSpec] = (),
+             extra_links: Sequence[LinkSpec] = ()) -> "FabricSpec":
+        """The canonical one-home/one-compute-site star.
+
+        Replica sites hang off the compute ``site`` at their declared
+        latencies (the ``home <-> replica`` path is left to the
+        composition rule), NIC budgets land on their named sites (a
+        budget naming an endpoint outside the star becomes a
+        budget-only site), and ``extra_sites`` / ``extra_links`` graft
+        incast clients and the like on.  The ``ussh_login`` shim and
+        the benchmarks both build their topologies through here.
+        """
+        budgets = dict(nic_budgets or {})
+        sites = [SiteSpec(home, root=home_root,
+                          nic_budget=budgets.pop(home, None)),
+                 SiteSpec(site, root=site_root,
+                          nic_budget=budgets.pop(site, None))]
+        links = []
+        for rname, latency_s in (replica_latencies or {}).items():
+            sites.append(SiteSpec(rname,
+                                  nic_budget=budgets.pop(rname, None)))
+            links.append(LinkSpec(site, rname, latency_s=latency_s))
+        for es in extra_sites:
+            if es.name in budgets:        # budget named a grafted site
+                es = _dc_replace(es, nic_budget=budgets.pop(es.name))
+            sites.append(es)
+        sites.extend(SiteSpec(name, nic_budget=b)
+                     for name, b in budgets.items())
+        links.extend(extra_links)
+        return cls(sites=tuple(sites), links=tuple(links),
+                   link=link if link is not None else LinkModel())
+
+
+class Fabric:
+    """Runtime topology built from a :class:`FabricSpec`.
+
+    Owns the :class:`Network` (or attaches to an existing one — the
+    ``ussh_login`` shim path), registers every declared site exactly
+    once, applies link overrides and NIC budgets, and mints sessions via
+    :meth:`login` / extra readers via :meth:`attach`.  All sessions share
+    the one network, so their traffic contends for the same channels and
+    NIC budgets — multi-user composition is the default, not a
+    copy-paste exercise.
+    """
+
+    def __init__(self, spec: FabricSpec,
+                 network: Optional[Network] = None):
+        self.spec = spec
+        if network is not None and network.link != spec.link:
+            # undeclared pairs ride network.link, not spec.link — a
+            # silently-divergent default would skew every derived
+            # timing number
+            raise ValueError(
+                "FabricSpec.link differs from the attached Network's "
+                "default link; declare the same LinkModel (or omit "
+                "network= and let the Fabric own one)")
+        self.network = network if network is not None \
+            else Network(link=_dc_replace(spec.link))
+        self.sessions: List[Session] = []
+        for site in spec.sites:
+            Endpoint(site.name, self.network)
+            if site.nic_budget is not None:
+                self.network.set_nic_budget(site.name, site.nic_budget)
+        for ls in spec.links:
+            if network is not None and self.network.has_link(ls.a, ls.b):
+                # attached to a live shared network: a pair another
+                # fabric (or an earlier login's composition) already
+                # timed is never retimed — same first-wins rule the
+                # login composition follows
+                continue
+            self.network.set_link(ls.a, ls.b, self._resolve_link(ls))
+
+    def _resolve_link(self, ls: LinkSpec) -> LinkModel:
+        if ls.link is not None:
+            return ls.link
+        return _dc_replace(self.network.link, latency_s=ls.latency_s)
+
+    def _site_root(self, name: str, override: Optional[str],
+                   what: str) -> str:
+        site = self.spec.site(name)        # KeyError on a typo'd name,
+        #                                    override or not
+        root = override if override is not None else site.root
+        if root is None:
+            raise ValueError(
+                f"site {name!r} declares no filesystem root; a {what} "
+                "needs one (SiteSpec(root=...) or the login override)")
+        return root
+
+    # ---- sessions --------------------------------------------------------
+    def login(self, user: str, *, home: str = "home", site: str = "site",
+              mounts: Optional[Sequence[MountSpec]] = None,
+              replicas: Optional[ReplicaPolicy] = None,
+              home_root: Optional[str] = None,
+              site_root: Optional[str] = None) -> Session:
+        """USSH login onto the declared topology (paper §3.2).
+
+        Starts ``user``'s personal file server at the ``home`` site,
+        authenticates the ``site``-side client over the HMAC challenge,
+        places read replicas per ``replicas`` (every named site must be
+        declared in the spec; undeclared ``home <-> replica`` links are
+        resolved by the latency-composition rule in the module
+        docstring), and mounts each :class:`MountSpec` (default: a bare
+        ``home/`` mount).  Sessions are recorded in ``self.sessions`` —
+        any number of users share the one topology.
+        """
+        home_dir = self._site_root(home, home_root, "home space")
+        site_dir = self._site_root(site, site_root, "client cache")
+        mounts = tuple(mounts) if mounts is not None else (MountSpec("home/"),)
+        prefixes = [ms.prefix for ms in mounts]
+        if len(set(prefixes)) != len(prefixes):
+            dupes = sorted({p for p in prefixes if prefixes.count(p) > 1})
+            raise ValueError(f"duplicate mount prefixes: {dupes}")
+        if replicas is not None:
+            for rname in replicas.sites:
+                self.spec.site(rname)           # KeyError on a topo typo
+        kp = KeyPhrase.generate()
+        store = HomeStore(os.path.join(home_dir, user),
+                          endpoint=self.network.endpoint(home),
+                          keyphrase=kp)
+        server = UserFileServer(user=user,
+                                endpoint=self.network.endpoint(home),
+                                store=store)
+        # SSH-authenticated login, then challenge-auth the data connections
+        self.network.rpc(site, home, "ssh_login", encrypted=True)
+        token = _authenticate(server)
+        rset: Optional[ReplicaSet] = None
+        if replicas is not None and replicas.sites:
+            rset = ReplicaSet(network=self.network, home_name=home,
+                              home_store=store, token=token,
+                              write_quorum=replicas.write_quorum,
+                              queue_aware=replicas.queue_aware,
+                              capacity_bytes=replicas.capacity_bytes)
+            for rname in replicas.sites:
+                if not self.network.has_link(home, rname):
+                    # replica sites are near the compute site but WAN-far
+                    # from home: compose the undeclared path through the
+                    # site region, so fan-out applies to different
+                    # replicas finish at distinct times (what makes W<N
+                    # drain time beat W=all under overlap).  A link
+                    # already on the live network — spec-declared or
+                    # composed by an earlier login — is never
+                    # overwritten: a second user logging in from a
+                    # different compute site must not retime the first
+                    # session's fan-out path.
+                    self.network.set_link(home, rname, _dc_replace(
+                        self.network.link,
+                        latency_s=self.network.link.latency_s +
+                        self.network.latency_between(site, rname)))
+                rstore = HomeStore(
+                    os.path.join(home_dir, ".replicas", rname, user),
+                    endpoint=self.network.endpoint(rname))
+                rset.add_replica(rname, rstore)
+        client = XufsClient(site, self.network,
+                            cache_root=os.path.join(site_dir, user, "cache"),
+                            oplog_root=os.path.join(site_dir, user, "oplog"),
+                            owner=user)
+        mount_specs: Dict[str, MountSpec] = {}
+        for ms in mounts:
+            client.mount(ms.prefix, home, store, token,
+                         localized=list(ms.localized), replicas=rset)
+            mount_specs[ms.prefix] = ms
+        session = Session(user=user, network=self.network, server=server,
+                          client=client, token=token, replicas=rset,
+                          mount_specs=mount_specs)
+        self.sessions.append(session)
+        return session
+
+    def attach(self, session: Session, site: str, *, owner: str,
+               mounts: Sequence[MountSpec],
+               site_root: Optional[str] = None) -> XufsClient:
+        """A further reader at ``site`` joins an existing session's home
+        space (the paper's shared-project-data case): its own cache,
+        oplog, and auth token on the shared topology, reusing the
+        session's replica fabric.  The home store still authenticates
+        the newcomer over the HMAC challenge — attach grants no
+        ambient authority."""
+        site_dir = self._site_root(site, site_root, "client cache")
+        token = _authenticate(session.server)
+        client = XufsClient(site, self.network,
+                            cache_root=os.path.join(site_dir, owner,
+                                                    "cache"),
+                            oplog_root=os.path.join(site_dir, owner,
+                                                    "oplog"),
+                            owner=owner)
+        for ms in mounts:
+            client.mount(ms.prefix, session.server.endpoint.name,
+                         session.server.store, token,
+                         localized=list(ms.localized),
+                         replicas=session.replicas)
+        return client

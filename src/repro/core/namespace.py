@@ -131,6 +131,12 @@ class XufsClient:
                   token=token, localized=localized or [],
                   replicas=replicas)
         self.mounts[prefix] = m
+        old_nm = self.notifiers.get(prefix)
+        if old_nm is not None:
+            # re-mount (remount/recovery): drop the old channel's store
+            # subscription, or every put() keeps feeding an orphaned
+            # pending list nobody drains
+            old_nm.teardown()
         nm = NotificationManager(self.network, self.name, server_name,
                                  store, self.cache, prefix=prefix)
         nm.register(token)

@@ -210,12 +210,22 @@ class ReplicaSet:
     def __init__(self, network: Network, home_name: str,
                  home_store: HomeStore, token: str,
                  write_quorum: WritePolicy = 1,
-                 queue_aware: bool = True):
+                 queue_aware: bool = True,
+                 capacity_bytes: Optional[int] = None):
+        if capacity_bytes is not None and capacity_bytes <= 0:
+            raise ValueError(
+                f"capacity_bytes must be > 0 (or None = unbounded): "
+                f"{capacity_bytes}")
         self.network = network
         self.home_name = home_name
         self.home_store = home_store
         self.token = token
         self.write_quorum = write_quorum
+        #: Per-replica placement budget (bytes).  Recorded from
+        #: ReplicaPolicy.capacity_bytes as the seam for the ROADMAP
+        #: eviction item; no placement/eviction acts on it yet —
+        #: replicas still mirror the whole home space.
+        self.capacity_bytes = capacity_bytes
         #: Rank read sources / fan-out targets by estimated completion
         #: (latency + channel queue + NIC backlog).  False restores the
         #: static nearest-by-latency ranking — on an idle network the

@@ -1,22 +1,32 @@
-"""USSH session (paper §3.2): login, per-user file server, authenticated mount.
+"""USSH session objects + the deprecated ``ussh_login`` shim.
 
-``ussh_login`` mirrors the paper's flow: generate a short-lived
-<key, phrase>, start a personal user-space file server at the home
-endpoint, authenticate the remote side via the HMAC challenge, and return
-a client whose mounts ride the authenticated token.
+:class:`Session` is what :meth:`repro.core.fabric.Fabric.login` returns:
+the user's personal file server, the site-side client, the auth token,
+and the replica fabric, plus the :class:`~repro.core.fabric.MountSpec`
+per mount so a bare :meth:`Session.remount` restores every mount exactly
+as declared (localized sub-prefixes included).
+
+``ussh_login`` mirrors the paper's §3.2 flow but is **deprecated**: it
+accreted ten keyword arguments and hid link construction, latency
+composition, and NIC wiring in its body.  It survives as a thin shim
+that assembles a declarative :class:`~repro.core.fabric.FabricSpec` and
+delegates to ``Fabric.login`` — bit-identical wiring (held by
+``tests/test_fabric_spec.py``), one :class:`DeprecationWarning` per
+process.  New code declares a spec; see ``docs/fabric.md``.
 """
 from __future__ import annotations
 
-import os
-from dataclasses import dataclass, field, replace as _dc_replace
-from typing import Dict, List, Optional
+import warnings
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Dict, List, Optional
 
 from repro.core.namespace import XufsClient
 from repro.core.replication import ReplicaSet, WritePolicy
 from repro.core.store import HomeStore
-from repro.core.transport import (
-    AuthError, Endpoint, KeyPhrase, Network, respond,
-)
+from repro.core.transport import Endpoint, Network, respond
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.core.fabric import MountSpec
 
 
 @dataclass
@@ -46,20 +56,90 @@ class Session:
     client: XufsClient
     token: str
     replicas: Optional[ReplicaSet] = None
+    #: prefix -> the MountSpec it was mounted with; remount()'s witness.
+    mount_specs: Dict[str, "MountSpec"] = field(default_factory=dict)
 
-    def remount(self, prefix: str, localized: Optional[List[str]] = None):
+    def remount(self, prefix: Optional[str] = None,
+                localized: Optional[List[str]] = None) -> None:
+        """Re-authenticate and re-mount this session's home mounts.
+
+        With no arguments every mount backed by this session's home
+        store is restored exactly as declared — stored
+        :class:`MountSpec` first, mounts added directly via
+        ``client.mount()`` field-for-field off the live Mount (localized
+        sub-prefixes included either way; a bare remount used to
+        silently drop them).  Mounts backed by a *foreign* home store
+        are left untouched: our crash did not invalidate their tokens
+        and this session cannot re-authenticate them.  ``prefix``
+        restores one mount; ``localized`` additionally replaces that
+        mount's localized set and updates the stored spec.  All
+        argument validation happens before the token rotates, so a
+        rejected call leaves the session exactly as it was.
+        """
+        from repro.core.fabric import MountSpec   # session<->fabric cycle
+        if prefix is None and localized is not None:
+            raise ValueError("localized override requires a prefix")
+        target: Optional["MountSpec"] = None
+        if prefix is not None:
+            live = self.client.mounts.get(prefix)
+            if live is not None and live.store is not self.server.store:
+                raise ValueError(
+                    f"mount {prefix!r} is backed by another home store; "
+                    "remount it from the session that owns it")
+            if localized is not None:
+                target = MountSpec(prefix, tuple(localized))
+            elif prefix in self.mount_specs:
+                target = self.mount_specs[prefix]
+            else:
+                try:
+                    target = MountSpec(prefix, tuple(live.localized)
+                                       if live is not None else ())
+                except ValueError:
+                    target = None     # legacy spelling client.mount()
+                    #                   accepted: restore raw, unrecorded
         token = _authenticate(self.server)
         self.token = token
         if self.replicas is not None:
             self.replicas.reattach(token=token)
-        self.client.mount(prefix, self.server.endpoint.name,
-                          self.server.store, token,
-                          localized=localized, replicas=self.replicas)
+        if prefix is not None:
+            if target is not None:
+                self.mount_specs[prefix] = target
+                loc = list(target.localized)
+            else:
+                loc = list(live.localized) if live is not None else []
+            # a live mount keeps its own replica wiring (a side mount
+            # created replicas=None must not gain the session's fabric)
+            self.client.mount(prefix, self.server.endpoint.name,
+                              self.server.store, token, localized=loc,
+                              replicas=live.replicas if live is not None
+                              else self.replicas)
+            return
+        for spec in self.mount_specs.values():
+            live = self.client.mounts.get(spec.prefix)
+            if live is not None and live.store is not self.server.store:
+                continue          # prefix re-pointed at a foreign home
+                #                   since login: the live mount wins
+            self.client.mount(spec.prefix, self.server.endpoint.name,
+                              self.server.store, token,
+                              localized=list(spec.localized),
+                              replicas=live.replicas if live is not None
+                              else self.replicas)
+        for p, m in list(self.client.mounts.items()):
+            if p in self.mount_specs or m.store is not self.server.store:
+                continue          # foreign home: not ours to rebind
+            self.client.mount(p, m.server_name, m.store, token,
+                              localized=list(m.localized),
+                              replicas=m.replicas)
 
 
 def _authenticate(server: UserFileServer) -> str:
     kp = server.store.keyphrase
     return server.store.authenticate(lambda ch: respond(kp, ch))
+
+
+#: ``ussh_login`` warns once per process, not once per call — benchmark
+#: sweeps and multi-user scripts log in dozens of times.
+_DEPRECATION_WARNED = False
 
 
 def ussh_login(user: str, network: Network, home_root: str,
@@ -70,60 +150,54 @@ def ussh_login(user: str, network: Network, home_root: str,
                write_quorum: "WritePolicy" = 1,
                nic_budgets: Optional[Dict[str, float]] = None,
                queue_aware: bool = True) -> Session:
-    """Login from the personal system into a site; mount the home space.
+    """Deprecated: assemble a :class:`FabricSpec` and ``Fabric.login``.
 
-    ``mounts`` maps namespace prefix -> localized sub-prefixes.
-    ``replica_sites`` maps replica endpoint name -> one-way latency (s)
-    from the compute site; each named site gets a read replica of the
-    home space registered in the session's :class:`ReplicaSet`, and cache
-    fills route to the cheapest fresh replica.
-    ``write_quorum`` sets the write-ack policy over home + replicas: an
-    explicit W, or ``"majority"`` / ``"all"``.  The default (1) is the
-    legacy policy — the home apply alone acks and fan-out is best-effort.
-    ``nic_budgets`` maps endpoint name -> aggregate NIC bytes/s
-    (``Network.set_nic_budget``); unlisted endpoints stay uncapped.
-    ``queue_aware`` toggles estimated-completion routing on the replica
-    set (False restores static nearest-by-latency ranking).
+    Kept as a shim for existing callers; the wiring is bit-identical to
+    the spec path (``tests/test_fabric_spec.py`` holds the trace
+    equivalence).  The keyword arguments map onto the spec one-for-one —
+    ``docs/fabric.md`` has the full migration table:
+
+    ``home_name``/``site_name`` + roots -> :class:`SiteSpec`;
+    ``replica_sites={r: lat}`` -> ``SiteSpec(r)`` + ``LinkSpec(site, r,
+    latency_s=lat)`` + ``ReplicaPolicy(sites=(r, ...))``;
+    ``write_quorum``/``queue_aware`` -> :class:`ReplicaPolicy` fields;
+    ``nic_budgets`` -> ``SiteSpec(nic_budget=...)``;
+    ``mounts={prefix: localized}`` -> :class:`MountSpec`.
+
+    One deliberate tightening: mount prefixes not ending in ``/`` (or
+    localized entries outside their prefix) now fail fast with
+    ``ValueError`` via :class:`MountSpec` validation, where the old code
+    silently accepted them and string-prefix matching could bleed a
+    ``data`` mount onto ``database/...`` paths.
     """
-    home_ep = Endpoint(home_name, network)
-    Endpoint(site_name, network)
-    for ep_name, budget in (nic_budgets or {}).items():
-        network.set_nic_budget(ep_name, budget)
-    kp = KeyPhrase.generate()
-    store = HomeStore(os.path.join(home_root, user), endpoint=home_ep,
-                      keyphrase=kp)
-    server = UserFileServer(user=user, endpoint=home_ep, store=store)
-    # SSH-authenticated login, then challenge-auth the data connections
-    network.rpc(site_name, home_name, "ssh_login", encrypted=True)
-    token = _authenticate(server)
-    replicas: Optional[ReplicaSet] = None
+    from repro.core.fabric import (
+        Fabric, FabricSpec, MountSpec, ReplicaPolicy,
+    )
+    global _DEPRECATION_WARNED
+    if not _DEPRECATION_WARNED:
+        _DEPRECATION_WARNED = True
+        warnings.warn(
+            "ussh_login() is deprecated: declare the topology once — "
+            "Fabric(FabricSpec(sites=(SiteSpec('home', root=...), "
+            "SiteSpec('site', root=...), ...), links=(LinkSpec('site', "
+            "'r1', latency_s=...), ...))).login(user, "
+            "mounts=[MountSpec('home/', localized=(...,))], "
+            "replicas=ReplicaPolicy(sites=(...), write_quorum=..., "
+            "queue_aware=...)) — see docs/fabric.md for the migration "
+            "table", DeprecationWarning, stacklevel=2)
+    spec = FabricSpec.star(home_root, site_root, home=home_name,
+                           site=site_name, replica_latencies=replica_sites,
+                           nic_budgets=nic_budgets, link=network.link)
+    policy = None
     if replica_sites:
-        replicas = ReplicaSet(network=network, home_name=home_name,
-                              home_store=store, token=token,
-                              write_quorum=write_quorum,
-                              queue_aware=queue_aware)
-        for rname, latency_s in replica_sites.items():
-            rep_ep = Endpoint(rname, network)
-            network.set_link(site_name, rname,
-                             _dc_replace(network.link, latency_s=latency_s))
-            # replica sites are near the compute site but WAN-far from
-            # home: model the home<->replica path through the site region,
-            # so fan-out applies to different replicas finish at distinct
-            # times (what makes W<N drain time beat W=all under overlap)
-            network.set_link(home_name, rname,
-                             _dc_replace(network.link,
-                                         latency_s=network.link.latency_s +
-                                         latency_s))
-            rstore = HomeStore(
-                os.path.join(home_root, ".replicas", rname, user),
-                endpoint=rep_ep)
-            replicas.add_replica(rname, rstore)
-    client = XufsClient(site_name, network,
-                        cache_root=os.path.join(site_root, user, "cache"),
-                        oplog_root=os.path.join(site_root, user, "oplog"),
-                        owner=user)
-    for prefix, localized in (mounts or {"home/": []}).items():
-        client.mount(prefix, home_name, store, token, localized=localized,
-                     replicas=replicas)
-    return Session(user=user, network=network, server=server, client=client,
-                   token=token, replicas=replicas)
+        policy = ReplicaPolicy(sites=tuple(replica_sites),
+                               write_quorum=write_quorum,
+                               queue_aware=queue_aware)
+    # an empty mounts dict got the default home/ mount pre-refactor
+    # (`mounts or {...}`) — only a non-empty dict overrides it
+    mount_specs = [MountSpec(prefix, tuple(localized or ()))
+                   for prefix, localized in mounts.items()] \
+        if mounts else None
+    return Fabric(spec, network=network).login(
+        user, home=home_name, site=site_name, mounts=mount_specs,
+        replicas=policy)

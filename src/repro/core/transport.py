@@ -179,6 +179,11 @@ class Network:
     def link_between(self, a: str, b: str) -> LinkModel:
         return self._links.get((min(a, b), max(a, b)), self.link)
 
+    def has_link(self, a: str, b: str) -> bool:
+        """Whether the pair carries a specific link (set_link) rather
+        than riding the network default."""
+        return (min(a, b), max(a, b)) in self._links
+
     def latency_between(self, a: str, b: str) -> float:
         return self.link_between(a, b).latency_s
 

@@ -14,7 +14,7 @@ import time
 import jax
 
 from repro.configs import ARCH_IDS, get_config, get_tiny_config
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec, SiteSpec
 from repro.checkpoint import CheckpointManager
 from repro.models import init_params
 from repro.serve.engine import ServeEngine, Request
@@ -34,9 +34,12 @@ def main() -> None:
     cfg = (get_tiny_config(args.arch) if args.tiny
            else get_config(args.arch)).replace(param_dtype="bfloat16")
     workdir = args.workdir or tempfile.mkdtemp(prefix="xufs_serve_")
-    net = Network()
-    s = ussh_login("server", net, os.path.join(workdir, "home"),
-                   os.path.join(workdir, "site"))
+    fabric = Fabric(FabricSpec(sites=(
+        SiteSpec("home", root=os.path.join(workdir, "home")),
+        SiteSpec("site", root=os.path.join(workdir, "site")),
+    )))
+    net = fabric.network
+    s = fabric.login("server")
 
     params = init_params(cfg, jax.random.PRNGKey(0))
     mgr = CheckpointManager(s.client, f"home/models/{cfg.name}")

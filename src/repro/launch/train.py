@@ -15,7 +15,7 @@ import tempfile
 
 from repro.config import RunConfig, ShapeConfig, OptimConfig
 from repro.configs import ARCH_IDS, get_config, get_tiny_config
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec, MountSpec, SiteSpec
 from repro.checkpoint import CheckpointManager
 from repro.data.pipeline import SyntheticCorpus, DataPipeline
 from repro.train import Trainer, FaultMonitor, FaultEvent
@@ -41,10 +41,13 @@ def main() -> None:
           f"family={cfg.family}")
 
     workdir = args.workdir or tempfile.mkdtemp(prefix="xufs_train_")
-    net = Network()
-    s = ussh_login("trainer", net, os.path.join(workdir, "home"),
-                   os.path.join(workdir, "site"),
-                   mounts={"home/": ["home/scratch/"]})
+    fabric = Fabric(FabricSpec(sites=(
+        SiteSpec("home", root=os.path.join(workdir, "home")),
+        SiteSpec("site", root=os.path.join(workdir, "site")),
+    )))
+    net = fabric.network
+    s = fabric.login("trainer",
+                     mounts=[MountSpec("home/", ("home/scratch/",))])
     SyntheticCorpus(s.client, "home/data", seed=0, vocab=cfg.vocab_size,
                     shard_tokens=max(args.batch * args.seq * 4, 8192)
                     ).materialize(4)

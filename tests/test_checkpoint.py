@@ -6,14 +6,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec
 from repro.checkpoint import CheckpointManager
 
 
 @pytest.fixture()
 def session(tmp_path):
-    net = Network()
-    return ussh_login("sci", net, str(tmp_path / "h"), str(tmp_path / "s"))
+    return Fabric(FabricSpec.star(str(tmp_path / "h"),
+                                  str(tmp_path / "s"))).login("sci")
 
 
 def _tree(seed=0):

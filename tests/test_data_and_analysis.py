@@ -3,7 +3,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec
 from repro.configs import get_tiny_config
 from repro.data.pipeline import SyntheticCorpus, DataPipeline
 from repro.launch.hlo_analysis import analyze, parse_module
@@ -14,8 +14,8 @@ from repro.launch.roofline import (
 
 @pytest.fixture()
 def session(tmp_path):
-    net = Network()
-    return ussh_login("sci", net, str(tmp_path / "h"), str(tmp_path / "s"))
+    return Fabric(FabricSpec.star(str(tmp_path / "h"),
+                                  str(tmp_path / "s"))).login("sci")
 
 
 def _pipe(s, cfg, **kw):

@@ -4,17 +4,20 @@ import os
 import pytest
 
 from repro.core import (
-    Network, ussh_login, DisconnectedError, AuthError, KeyPhrase,
+    AuthError, DisconnectedError, Fabric, FabricSpec, KeyPhrase, MountSpec,
 )
 from repro.core.transport import respond, verify, make_challenge
 
 
+def plain_fabric(tmp_path) -> Fabric:
+    return Fabric(FabricSpec.star(str(tmp_path / "home"),
+                                  str(tmp_path / "site")))
+
+
 @pytest.fixture()
 def session(tmp_path):
-    net = Network()
-    return ussh_login("sci", net, str(tmp_path / "home"),
-                      str(tmp_path / "site"),
-                      mounts={"home/": ["home/scratch/raw/"]})
+    return plain_fabric(tmp_path).login(
+        "sci", mounts=[MountSpec("home/", ("home/scratch/raw/",))])
 
 
 def test_whole_file_cache_hit_after_first_open(session):
@@ -122,8 +125,7 @@ def test_server_crash_reconnect_revalidates(session):
 
 
 def test_auth_challenge_rejects_wrong_key(tmp_path):
-    net = Network()
-    s = ussh_login("sci", net, str(tmp_path / "h"), str(tmp_path / "s"))
+    s = plain_fabric(tmp_path).login("sci")
     wrong = KeyPhrase.generate()
     with pytest.raises(AuthError):
         s.server.store.authenticate(lambda ch: respond(wrong, ch))

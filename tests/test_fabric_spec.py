@@ -1,0 +1,594 @@
+"""Declarative fabric spec: validation, shim trace-equivalence,
+multi-user fabrics, remount restoration, deprecation.
+
+The load-bearing suite for the topology API: the ``ussh_login`` shim and
+an equivalent :class:`FabricSpec` must wire the network **bit-identically**
+(same ``Network.trace``, same final clock) on every benchmark topology —
+that is what keeps the PR 2-4 self-gating benchmark numbers valid after
+the refactor.
+"""
+import warnings
+
+import pytest
+
+from repro.core import (
+    Fabric, FabricSpec, LinkModel, LinkSpec, MB, MountSpec, Network,
+    ReplicaPolicy, ReplicaSet, SiteSpec, ussh_login,
+)
+from repro.core import session as session_mod
+
+HOME_LATENCY = 0.060
+REPLICAS = {"r1": 0.005, "r2": 0.015}
+
+
+def star_spec(tmp_path, tag, *, replicas=(), budgets=None,
+              latency_s=HOME_LATENCY):
+    """Deliberately hand-rolled, NOT FabricSpec.star: the trace
+    equivalence below must compare the shim against an independently
+    spelled spec, and the shim itself builds through FabricSpec.star."""
+    budgets = budgets or {}
+    sites = [SiteSpec("home", root=str(tmp_path / f"h-{tag}"),
+                      nic_budget=budgets.get("home")),
+             SiteSpec("site", root=str(tmp_path / f"s-{tag}"),
+                      nic_budget=budgets.get("site"))]
+    links = []
+    for rname in replicas:
+        sites.append(SiteSpec(rname, nic_budget=budgets.get(rname)))
+        links.append(LinkSpec("site", rname, latency_s=REPLICAS[rname]))
+    return FabricSpec(sites=tuple(sites), links=tuple(links),
+                      link=LinkModel(latency_s=latency_s))
+
+
+# ---- spec validation -------------------------------------------------------
+
+def test_spec_rejects_duplicate_sites():
+    with pytest.raises(ValueError, match="duplicate site"):
+        FabricSpec(sites=(SiteSpec("a"), SiteSpec("a")))
+
+
+def test_spec_rejects_link_to_undeclared_site():
+    with pytest.raises(ValueError, match="undeclared site"):
+        FabricSpec(sites=(SiteSpec("a"),),
+                   links=(LinkSpec("a", "ghost", latency_s=0.01),))
+
+
+def test_spec_rejects_duplicate_links():
+    with pytest.raises(ValueError, match="duplicate link"):
+        FabricSpec(sites=(SiteSpec("a"), SiteSpec("b")),
+                   links=(LinkSpec("a", "b", latency_s=0.01),
+                          LinkSpec("b", "a", latency_s=0.02)))
+
+
+def test_link_spec_needs_exactly_one_override():
+    with pytest.raises(ValueError, match="exactly one"):
+        LinkSpec("a", "b")
+    with pytest.raises(ValueError, match="exactly one"):
+        LinkSpec("a", "b", latency_s=0.01, link=LinkModel())
+    with pytest.raises(ValueError):
+        LinkSpec("a", "a", latency_s=0.01)
+
+
+def test_site_spec_rejects_nonpositive_budget():
+    with pytest.raises(ValueError, match="NIC budget"):
+        SiteSpec("a", nic_budget=0)
+
+
+def test_mount_spec_validates_prefix_and_localized():
+    with pytest.raises(ValueError, match="end with"):
+        MountSpec("home")
+    with pytest.raises(ValueError, match="not under"):
+        MountSpec("home/", ("elsewhere/raw/",))
+    assert MountSpec("home/", ["home/a/"]).localized == ("home/a/",)
+
+
+def test_replica_policy_validates():
+    with pytest.raises(ValueError, match="duplicate"):
+        ReplicaPolicy(sites=("r1", "r1"))
+    with pytest.raises(ValueError, match="write_quorum"):
+        ReplicaPolicy(sites=("r1",), write_quorum="most")
+    with pytest.raises(ValueError, match="write_quorum"):
+        ReplicaPolicy(sites=("r1",), write_quorum=0)
+    with pytest.raises(ValueError, match="capacity_bytes"):
+        ReplicaPolicy(sites=("r1",), capacity_bytes=-5)
+
+
+def test_attaching_network_with_divergent_default_link_rejected(tmp_path):
+    spec = star_spec(tmp_path, "div")            # default 60 ms
+    with pytest.raises(ValueError, match="default link"):
+        Fabric(spec, network=Network())          # network default 30 ms
+    # matching defaults attach fine (the shim path)
+    Fabric(spec, network=Network(link=LinkModel(latency_s=HOME_LATENCY)))
+
+
+def test_login_rejects_duplicate_mount_prefixes(tmp_path):
+    fab = Fabric(star_spec(tmp_path, "dupm"))
+    with pytest.raises(ValueError, match="duplicate mount"):
+        fab.login("sci", mounts=[
+            MountSpec("home/", ("home/scratch/",)), MountSpec("home/")])
+
+
+def test_login_rejects_undeclared_replica_site(tmp_path):
+    fab = Fabric(star_spec(tmp_path, "typo"))
+    with pytest.raises(KeyError, match="ghost"):
+        fab.login("sci", replicas=ReplicaPolicy(sites=("ghost",)))
+    # a root override must not bypass the declared-site check
+    with pytest.raises(KeyError, match="hme"):
+        fab.login("sci", home="hme", home_root=str(tmp_path / "x"))
+
+
+def test_login_requires_a_root(tmp_path):
+    fab = Fabric(FabricSpec(sites=(SiteSpec("home"), SiteSpec("site"))))
+    with pytest.raises(ValueError, match="root"):
+        fab.login("sci")
+    # the login-time override unblocks a rootless spec
+    s = fab.login("sci", home_root=str(tmp_path / "h"),
+                  site_root=str(tmp_path / "s"))
+    assert s.client.cache.root.startswith(str(tmp_path / "s"))
+
+
+def test_capacity_bytes_records_on_replica_set(tmp_path):
+    fab = Fabric(star_spec(tmp_path, "cap", replicas=("r1",)))
+    s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",),
+                                                capacity_bytes=64 * MB))
+    assert s.replicas.capacity_bytes == 64 * MB
+    with pytest.raises(ValueError, match="capacity_bytes"):
+        ReplicaSet(s.network, "home", s.server.store, s.token,
+                   capacity_bytes=0)
+
+
+def test_later_login_never_retimes_a_composed_link(tmp_path):
+    """Two users sharing one home site + replica from different compute
+    sites: the second login must not overwrite the link the first login
+    composed — retiming a live session's fan-out path mid-run."""
+    fab = Fabric(FabricSpec(
+        sites=(SiteSpec("h", root=str(tmp_path / "h")),
+               SiteSpec("pod1", root=str(tmp_path / "p1")),
+               SiteSpec("pod2", root=str(tmp_path / "p2")),
+               SiteSpec("r1")),
+        links=(LinkSpec("pod1", "r1", latency_s=0.005),
+               LinkSpec("pod2", "r1", latency_s=0.030)),
+        link=LinkModel(latency_s=HOME_LATENCY)))
+    fab.login("alice", home="h", site="pod1",
+              replicas=ReplicaPolicy(sites=("r1",)))
+    composed = fab.network.latency_between("h", "r1")
+    assert composed == pytest.approx(HOME_LATENCY + 0.005)
+    fab.login("bob", home="h", site="pod2",
+              replicas=ReplicaPolicy(sites=("r1",)))
+    assert fab.network.latency_between("h", "r1") == composed
+
+
+def test_explicit_home_replica_link_overrides_composition(tmp_path):
+    spec = star_spec(tmp_path, "comp", replicas=("r1", "r2"))
+    override = spec.links + (LinkSpec("home", "r1", latency_s=0.001),)
+    fab = Fabric(FabricSpec(sites=spec.sites, links=override,
+                            link=spec.link))
+    fab.login("sci", replicas=ReplicaPolicy(sites=("r1", "r2")))
+    net = fab.network
+    assert net.latency_between("home", "r1") == 0.001      # declared wins
+    assert net.latency_between("home", "r2") == pytest.approx(
+        HOME_LATENCY + REPLICAS["r2"])                     # composed
+
+
+# ---- shim trace equivalence ------------------------------------------------
+
+def _plain_workload(s):
+    s.server.store.put(s.token, "home/data/a.bin", b"A" * 300_000)
+    with s.client.open("home/data/a.bin") as f:
+        assert f.read()
+    s.client.opendir("home/data")
+    s.client.stat("home/data/a.bin")
+    with s.client.open("home/out/r.dat", "w") as f:
+        f.write(b"R" * 200_000)
+    s.client.sync()
+    s.client.network.drain()
+
+
+def _replica_workload(s):
+    for i in range(4):
+        s.server.store.put(s.token, f"home/d/f{i}.bin", b"x" * (1 * MB))
+    s.replicas.resync()
+    for i in range(4):
+        with s.client.open(f"home/d/f{i}.bin") as f:
+            assert f.read()
+    s.client.network.partition("site", "r1")
+    s.client.cache.evict("home/d/f0.bin")
+    with s.client.open("home/d/f0.bin") as f:       # degrade to r2
+        assert f.read()
+    s.client.network.heal("site", "r1")
+    s.client.network.drain()
+
+
+def _quorum_workload(s):
+    for i in range(3):
+        with s.client.open(f"home/out/q{i}.dat", "w") as f:
+            f.write(bytes([i + 1]) * 200_000)
+    s.client.sync()
+    s.client.network.drain()
+
+
+def _budget_workload(s):
+    for i in range(3):
+        s.server.store.put(s.token, f"home/d/b{i}.bin", b"B" * (2 * MB))
+    s.replicas.resync()
+    for i in range(3):
+        with s.client.open(f"home/d/b{i}.bin") as f:
+            assert f.read()
+    s.client.network.drain()
+
+
+TOPOLOGIES = [
+    ("plain", {}, None, _plain_workload),
+    ("replicated", dict(replica_sites=dict(REPLICAS)),
+     ReplicaPolicy(sites=tuple(REPLICAS)), _replica_workload),
+    ("quorum", dict(replica_sites=dict(REPLICAS), write_quorum="majority"),
+     ReplicaPolicy(sites=tuple(REPLICAS), write_quorum="majority"),
+     _quorum_workload),
+    ("budgeted", dict(replica_sites=dict(REPLICAS),
+                      nic_budgets={"home": 100 * MB, "r1": 50 * MB}),
+     ReplicaPolicy(sites=tuple(REPLICAS)), _budget_workload),
+]
+
+
+@pytest.mark.parametrize("tag,kwargs,policy,workload",
+                         TOPOLOGIES, ids=[t[0] for t in TOPOLOGIES])
+def test_shim_and_spec_wire_bit_identical_traces(tmp_path, tag, kwargs,
+                                                 policy, workload):
+    """The acceptance gate: for each benchmark topology the deprecated
+    ``ussh_login`` shim and the equivalent FabricSpec produce
+    bit-identical ``Network.trace`` and final clock over one workload —
+    so every PR 2-4 self-gating number survives the refactor unchanged.
+    """
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        net = Network(link=LinkModel(latency_s=HOME_LATENCY))
+        shim = ussh_login("sci", net, str(tmp_path / f"sh-{tag}"),
+                          str(tmp_path / f"ss-{tag}"),
+                          mounts={"home/": ["home/scratch/"]}, **kwargs)
+    workload(shim)
+
+    budgets = kwargs.get("nic_budgets") or {}
+    spec = star_spec(tmp_path, tag, replicas=tuple(REPLICAS)
+                     if "replica_sites" in kwargs else (), budgets=budgets)
+    s = Fabric(spec).login(
+        "sci", mounts=[MountSpec("home/", ("home/scratch/",))],
+        replicas=policy)
+    workload(s)
+
+    assert s.network.trace == shim.network.trace
+    assert s.network.clock == shim.network.clock
+    assert s.network.per_endpoint_bytes == shim.network.per_endpoint_bytes
+
+
+# ---- multi-user fabrics ----------------------------------------------------
+
+def two_user_fabric(tmp_path, *, pod_budget=None):
+    """Two users, two home sites, ONE shared compute site ("pod")."""
+    spec = FabricSpec(
+        sites=(SiteSpec("home1", root=str(tmp_path / "h1")),
+               SiteSpec("home2", root=str(tmp_path / "h2")),
+               SiteSpec("pod", root=str(tmp_path / "pod"),
+                        nic_budget=pod_budget),
+               SiteSpec("r1"), SiteSpec("r2")),
+        links=(LinkSpec("pod", "r1", latency_s=0.005),
+               LinkSpec("pod", "r2", latency_s=0.015)),
+        link=LinkModel(latency_s=HOME_LATENCY))
+    fab = Fabric(spec)
+    s1 = fab.login("alice", home="home1", site="pod",
+                   replicas=ReplicaPolicy(sites=("r1",)))
+    s2 = fab.login("bob", home="home2", site="pod",
+                   replicas=ReplicaPolicy(sites=("r2",)))
+    return fab, s1, s2
+
+
+def test_two_users_one_fabric_are_isolated(tmp_path):
+    from repro.core import AuthError
+    fab, s1, s2 = two_user_fabric(tmp_path)
+    assert fab.sessions == [s1, s2]
+    assert s1.network is s2.network                     # shared topology
+    s1.server.store.put(s1.token, "home/secret1", b"a" * 1000)
+    s2.server.store.put(s2.token, "home/secret2", b"b" * 1000)
+    s1.replicas.resync()
+    s2.replicas.resync()
+    # foreign tokens are worthless at the other user's home AND replicas
+    with pytest.raises(AuthError):
+        s2.server.store.get(s1.token, "home/secret2")
+    with pytest.raises(AuthError):
+        s1.server.store.get(s2.token, "home/secret1")
+    for other, sess in ((s2, s1), (s1, s2)):
+        for rep in other.replicas.replicas.values():
+            with pytest.raises((AuthError, FileNotFoundError)):
+                rep.store.get(sess.token, "home/secret%d" %
+                              (2 if other is s2 else 1))
+    # each client reads only its own namespace
+    with s1.client.open("home/secret1") as f:
+        assert f.read() == b"a" * 1000
+    with pytest.raises(FileNotFoundError):
+        s1.client.open("home/secret2")
+
+
+def test_shared_nic_budget_charges_both_sessions(tmp_path):
+    """The pod's NIC budget is one shared resource: both users' traffic
+    serializes through it, so the two-user drain is bounded below by
+    total-bytes / budget — and strictly slower than an uncapped pod."""
+    budget = 10 * MB
+    nbytes = 2 * MB
+
+    def drain_two(pod_budget):
+        fab, s1, s2 = two_user_fabric(tmp_path if pod_budget is None
+                                      else tmp_path / "cap",
+                                      pod_budget=pod_budget)
+        net = fab.network
+        for s, name in ((s1, "alice"), (s2, "bob")):
+            with s.client.open(f"home/out/{name}.dat", "w") as f:
+                f.write(b"Z" * nbytes)
+        c0 = net.clock
+        s1.client.sync()
+        s2.client.sync()
+        net.drain()
+        return net.clock - c0
+
+    capped = drain_two(budget)
+    uncapped = drain_two(None)
+    assert capped >= 2 * nbytes / budget                # conservation
+    assert capped > uncapped
+
+
+def test_attach_joins_existing_session(tmp_path):
+    """A second reader attaches to the owner's home space on its own
+    token; replica fills and privacy both hold."""
+    from repro.core import AuthError
+    fab, s1, s2 = two_user_fabric(tmp_path)
+    s1.server.store.put(s1.token, "home/shared.bin", b"s" * (1 * MB))
+    s1.replicas.resync()
+    reader = fab.attach(s1, "pod", owner="carol",
+                        mounts=(MountSpec("home/"),))
+    with reader.open("home/shared.bin") as f:
+        assert f.read() == b"s" * (1 * MB)
+    assert reader.cache.fills_from == {"r1": 1}         # rides the fabric
+    # carol's token is scoped to alice's store, not bob's
+    tok = reader.mounts["home/"].token
+    assert tok != s1.token
+    with pytest.raises(AuthError):
+        s2.server.store.get(tok, "home/secret2")
+
+
+# ---- remount restores the MountSpec ---------------------------------------
+
+def localized_session(tmp_path):
+    fab = Fabric(star_spec(tmp_path, "rm"))
+    return fab.login("sci", mounts=[
+        MountSpec("home/", ("home/scratch/raw/",))])
+
+
+def test_bare_remount_restores_localized_subprefixes(tmp_path):
+    """Regression: remount() used to silently drop the localized list,
+    silently turning never-ships-home scratch into write-behind."""
+    s = localized_session(tmp_path)
+    s.server.crash()
+    s.remount()
+    with s.client.open("home/scratch/raw/dump.bin", "w") as f:
+        f.write(b"\x00" * 10_000)
+    assert s.client.oplog.pending() == []               # still localized
+    assert s.client.mounts["home/"].localized == ["home/scratch/raw/"]
+
+
+def test_bare_remount_without_mount_specs_reads_live_mounts(tmp_path):
+    """A Session built outside Fabric.login carries no mount_specs; the
+    live Mounts still know their localized lists and a bare remount
+    must honor them."""
+    s = localized_session(tmp_path)
+    s.mount_specs.clear()                  # pre-spec construction pattern
+    s.remount()
+    assert s.client.mounts["home/"].localized == ["home/scratch/raw/"]
+
+
+def test_bare_remount_covers_mounts_added_after_login(tmp_path):
+    """A mount added directly via client.mount() after login must be
+    re-mounted too — a bare remount that skipped it would leave the
+    live Mount holding a token the crash revoked."""
+    s = localized_session(tmp_path)
+    s.client.mount("proj/", s.server.endpoint.name, s.server.store,
+                   s.token, localized=["proj/tmp/"])
+    s.server.store.put(s.token, "proj/x", b"x")
+    s.server.crash()
+    s.remount()
+    assert s.client.mounts["proj/"].token == s.token     # fresh token
+    assert s.client.mounts["proj/"].localized == ["proj/tmp/"]
+    with s.client.open("proj/x") as f:                   # usable end to end
+        assert f.read() == b"x"
+    assert s.client.mounts["home/"].localized == ["home/scratch/raw/"]
+
+
+def test_remount_prefix_without_stored_spec_reads_live_mount(tmp_path):
+    """remount(prefix) on a Session with no stored MountSpec must fall
+    back to the live Mount's localized list, same as bare remount()."""
+    s = localized_session(tmp_path)
+    s.mount_specs.clear()
+    s.remount("home/")
+    assert s.client.mounts["home/"].localized == ["home/scratch/raw/"]
+    assert s.mount_specs["home/"].localized == ("home/scratch/raw/",)
+
+
+def test_remount_single_prefix_keeps_its_spec(tmp_path):
+    s = localized_session(tmp_path)
+    s.remount("home/")
+    assert s.client.mounts["home/"].localized == ["home/scratch/raw/"]
+
+
+def test_remount_localized_override_updates_spec(tmp_path):
+    s = localized_session(tmp_path)
+    s.remount("home/", localized=["home/tmp/"])
+    assert s.client.mounts["home/"].localized == ["home/tmp/"]
+    assert s.mount_specs["home/"].localized == ("home/tmp/",)
+    s.remount()                                         # override sticks
+    assert s.client.mounts["home/"].localized == ["home/tmp/"]
+
+
+def test_bare_remount_leaves_foreign_mounts_untouched(tmp_path):
+    """alice's client also mounts bob's store (the shared-project
+    pattern): alice's remount must not rebind that mount onto her own
+    store — bob's server did not crash and her token is worthless
+    there."""
+    fab, alice, bob = two_user_fabric(tmp_path)
+    bob.server.store.put(bob.token, "proj/shared", b"b" * 1000)
+    alice.client.mount("proj/", bob.server.endpoint.name,
+                       bob.server.store, bob.token)
+    alice.server.crash()
+    alice.remount()
+    m = alice.client.mounts["proj/"]
+    assert m.store is bob.server.store            # still bob's
+    assert m.token == bob.token                   # bob's token survives
+    with alice.client.open("proj/shared") as f:   # cold read still works
+        assert f.read() == b"b" * 1000
+    with pytest.raises(ValueError, match="another home store"):
+        alice.remount("proj/")                    # explicit ask is an error
+
+
+def test_bare_remount_respects_spec_prefix_repointed_to_foreign_store(
+        tmp_path):
+    """A spec-tracked prefix later re-pointed at a foreign store via
+    client.mount must NOT be yanked back onto the session's own store
+    by a bare remount — the live mount wins."""
+    fab, alice, bob = two_user_fabric(tmp_path)
+    bob.server.store.put(bob.token, "home/bobs", b"b" * 500)
+    alice.client.mount("home/", bob.server.endpoint.name,
+                       bob.server.store, bob.token)
+    alice.server.crash()
+    alice.remount()
+    assert alice.client.mounts["home/"].store is bob.server.store
+
+
+def test_remount_single_legacy_prefix_restores_field_for_field(tmp_path):
+    """remount(prefix) on a legacy no-slash mount (accepted by
+    client.mount, rejected by MountSpec) restores it raw instead of
+    raising — targeted recovery must not require the all-mounts path."""
+    s = localized_session(tmp_path)
+    s.client.mount("raw", s.server.endpoint.name, s.server.store,
+                   s.token, localized=["raw/tmp/"])
+    s.server.crash()
+    s.remount("raw")
+    assert s.client.mounts["raw"].token == s.token
+    assert s.client.mounts["raw"].localized == ["raw/tmp/"]
+    assert "raw" not in s.mount_specs             # unvalidatable: unrecorded
+
+
+def test_remount_validation_is_atomic(tmp_path):
+    """A rejected remount must leave the session untouched — the old
+    order rotated the token first, bricking every live mount when a
+    legacy (unvalidatable) prefix aborted the loop mid-way."""
+    s = localized_session(tmp_path)
+    token0 = s.token
+    with pytest.raises(ValueError, match="end with"):
+        s.remount("noslash", localized=["noslash/x/"])
+    assert s.token == token0                      # token not rotated
+    with s.client.open("home/a", "w") as f:       # session fully usable
+        f.write(b"a")
+    # a legacy no-slash mount added directly survives a bare remount
+    s.client.mount("raw", s.server.endpoint.name, s.server.store,
+                   s.token, localized=["raw/tmp/"])
+    s.server.crash()
+    s.remount()
+    assert s.client.mounts["raw"].token == s.token
+    assert s.client.mounts["raw"].localized == ["raw/tmp/"]
+
+
+def test_remount_does_not_leak_store_subscriptions(tmp_path):
+    """Re-mounting replaces the notification channel; the old channel's
+    store subscription must go with it, or every put() feeds an
+    orphaned pending list forever."""
+    s = localized_session(tmp_path)
+    n0 = len(s.server.store._subscribers)
+    for _ in range(3):
+        s.remount()
+    assert len(s.server.store._subscribers) == n0
+    s.remount("home/", localized=["home/tmp/"])
+    assert len(s.server.store._subscribers) == n0
+
+
+def test_remount_preserves_side_mount_replica_wiring(tmp_path):
+    """A side mount explicitly created with replicas=None must not gain
+    the session's ReplicaSet on remount — either spelling."""
+    fab = Fabric(star_spec(tmp_path, "sidew", replicas=("r1",)))
+    s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",)))
+    s.client.mount("side/", s.server.endpoint.name, s.server.store,
+                   s.token, localized=None, replicas=None)
+    s.remount("side/")
+    assert s.client.mounts["side/"].replicas is None
+    s.remount()
+    assert s.client.mounts["side/"].replicas is None
+    assert s.client.mounts["home/"].replicas is s.replicas
+
+
+def test_remount_localized_without_prefix_rejected(tmp_path):
+    s = localized_session(tmp_path)
+    with pytest.raises(ValueError, match="prefix"):
+        s.remount(localized=["home/x/"])
+
+
+def test_remount_reauthenticates_and_reattaches(tmp_path):
+    fab = Fabric(star_spec(tmp_path, "rma", replicas=("r1",)))
+    s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",)))
+    s.server.store.put(s.token, "home/x", b"x")
+    old_token = s.token
+    s.server.crash()                       # drops token + subscriptions
+    s.remount()
+    assert s.token != old_token
+    assert s.replicas.token == s.token
+    with s.client.open("home/x") as f:     # fresh token works end to end
+        assert f.read() == b"x"
+
+
+def test_shim_empty_mounts_dict_gets_default_mount(tmp_path):
+    """Pre-refactor `mounts or {...}` gave a falsy empty dict the
+    default home/ mount; the shim must preserve that."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        s = ussh_login("sci", Network(), str(tmp_path / "h"),
+                       str(tmp_path / "s"), mounts={})
+    assert list(s.client.mounts) == ["home/"]
+    assert s.mount_specs == {"home/": MountSpec("home/")}
+
+
+def test_star_constructor_matches_handrolled_spec(tmp_path):
+    built = FabricSpec.star(
+        str(tmp_path / "h-star"), str(tmp_path / "s-star"),
+        replica_latencies=dict(REPLICAS),
+        nic_budgets={"home": 100 * MB, "elsewhere": 10 * MB},
+        link=LinkModel(latency_s=HOME_LATENCY))
+    hand = star_spec(tmp_path, "star", replicas=tuple(REPLICAS),
+                     budgets={"home": 100 * MB})
+    hand = FabricSpec(sites=hand.sites + (SiteSpec("elsewhere",
+                                                   nic_budget=10 * MB),),
+                      links=hand.links, link=hand.link)
+    assert built == hand
+
+
+def test_star_merges_budget_onto_grafted_extra_site(tmp_path):
+    """A NIC budget naming a site that arrives via extra_sites lands on
+    that site instead of colliding as a duplicate budget-only site."""
+    spec = FabricSpec.star(
+        str(tmp_path / "h-g"), str(tmp_path / "s-g"),
+        nic_budgets={"c0": 10 * MB},
+        extra_sites=(SiteSpec("c0"), SiteSpec("c1")))
+    assert spec.site("c0").nic_budget == 10 * MB
+    assert spec.site("c1").nic_budget is None
+
+
+# ---- deprecation -----------------------------------------------------------
+
+def test_ussh_login_warns_exactly_once_with_migration_hint(tmp_path):
+    session_mod._DEPRECATION_WARNED = False
+    try:
+        with warnings.catch_warnings(record=True) as caught:
+            warnings.simplefilter("always")
+            net = Network()
+            ussh_login("sci", net, str(tmp_path / "h1"), str(tmp_path / "s1"))
+            ussh_login("sci2", net, str(tmp_path / "h2"),
+                       str(tmp_path / "s2"))
+        deps = [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
+        assert len(deps) == 1                  # once per process, not call
+        msg = str(deps[0].message)
+        assert "FabricSpec" in msg and "docs/fabric.md" in msg
+    finally:
+        session_mod._DEPRECATION_WARNED = True

@@ -1,0 +1,65 @@
+"""Public-API stability: ``repro.core`` exports the documented surface.
+
+``docs/fabric.md`` documents the declarative spec layer; this test pins
+the exported names so a refactor cannot silently drop (or typo) part of
+the public surface.  Additions are fine — removals and renames must
+update the docs and this list together.
+"""
+import inspect
+
+import repro.core as core
+
+#: The documented spec surface (docs/fabric.md).  Every name must be
+#: exported, importable, and non-None.
+SPEC_SURFACE = {
+    "Fabric", "FabricSpec", "SiteSpec", "LinkSpec", "ReplicaPolicy",
+    "MountSpec", "Session", "UserFileServer", "ussh_login",
+}
+
+#: The long-standing core surface the spec layer composes with.
+CORE_SURFACE = {
+    "Network", "Endpoint", "LinkModel", "Transfer", "KeyPhrase",
+    "DisconnectedError", "AuthError", "QuorumNotReachedError",
+    "KB", "MB", "GB",
+    "HomeStore", "ObjectStat", "CacheSpace", "CacheEntry",
+    "MetaOpQueue", "OpRecord", "NotificationManager",
+    "PendingApply", "Replica", "ReplicaCatalog", "ReplicaSet",
+    "WritePolicy", "LeaseManager", "XufsClient", "XufsFile", "Mount",
+    "Prefetcher", "StripedTransfer", "TransferGroup", "StripePlan",
+    "plan_stripes", "reassemble",
+}
+
+
+def test_all_covers_documented_surface():
+    missing = (SPEC_SURFACE | CORE_SURFACE) - set(core.__all__)
+    assert not missing, f"repro.core.__all__ lost exports: {sorted(missing)}"
+
+
+def test_every_export_resolves():
+    for name in core.__all__:
+        assert getattr(core, name) is not None, f"{name} exports as None"
+
+
+def test_spec_layer_signatures_are_stable():
+    """The login surface the docs teach: keyword names are API."""
+    params = inspect.signature(core.Fabric.login).parameters
+    for kw in ("home", "site", "mounts", "replicas", "home_root",
+               "site_root"):
+        assert kw in params, f"Fabric.login lost keyword {kw!r}"
+        assert params[kw].kind is inspect.Parameter.KEYWORD_ONLY
+    policy_fields = set(core.ReplicaPolicy.__dataclass_fields__)
+    assert {"sites", "write_quorum", "queue_aware",
+            "capacity_bytes"} <= policy_fields
+    site_fields = set(core.SiteSpec.__dataclass_fields__)
+    assert {"name", "root", "nic_budget"} <= site_fields
+    link_fields = set(core.LinkSpec.__dataclass_fields__)
+    assert {"a", "b", "latency_s", "link"} <= link_fields
+    mount_fields = set(core.MountSpec.__dataclass_fields__)
+    assert {"prefix", "localized"} <= mount_fields
+    spec_fields = set(core.FabricSpec.__dataclass_fields__)
+    assert {"sites", "links", "link"} <= spec_fields
+
+
+def test_deprecated_shim_still_exported():
+    """ussh_login stays importable until a major version drops it."""
+    assert callable(core.ussh_login)

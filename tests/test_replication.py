@@ -7,17 +7,21 @@ home), a flusher crash between the home apply and the replica fan-out
 import pytest
 
 from repro.core import (
-    DisconnectedError, LinkModel, MB, Network, ussh_login,
+    DisconnectedError, Fabric, FabricSpec, LinkModel, MB, ReplicaPolicy,
 )
 
 HOME_LATENCY = 0.060
 
 
-def login(tmp_path, replica_sites, tag="a"):
-    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
-    return ussh_login("sci", net, str(tmp_path / f"home-{tag}"),
-                      str(tmp_path / f"site-{tag}"),
-                      replica_sites=replica_sites)
+def login(tmp_path, replica_sites, tag="a", write_quorum=1):
+    fab = Fabric(FabricSpec.star(str(tmp_path / f"home-{tag}"),
+                                 str(tmp_path / f"site-{tag}"),
+                                 replica_latencies=replica_sites,
+                                 link=LinkModel(latency_s=HOME_LATENCY)))
+    policy = ReplicaPolicy(sites=tuple(replica_sites),
+                           write_quorum=write_quorum) \
+        if replica_sites else None
+    return fab.login("sci", replicas=policy)
 
 
 @pytest.fixture()
@@ -195,12 +199,8 @@ def test_deleted_at_home_drops_replicas_from_read_path(rsession):
 # ---- quorum-acknowledged writes --------------------------------------------
 
 def qlogin(tmp_path, write_quorum, tag="q"):
-    from repro.core import LinkModel, Network, ussh_login
-    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
-    return ussh_login("sci", net, str(tmp_path / f"home-{tag}"),
-                      str(tmp_path / f"site-{tag}"),
-                      replica_sites={"r1": 0.005, "r2": 0.015},
-                      write_quorum=write_quorum)
+    return login(tmp_path, {"r1": 0.005, "r2": 0.015}, tag=tag,
+                 write_quorum=write_quorum)
 
 
 def test_flusher_crash_after_partial_acks_resumes_from_persisted_acks(

@@ -7,7 +7,7 @@ analyze results back at home -> raw output stays localized.
 import numpy as np
 import pytest
 
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec, MountSpec
 from repro.config import RunConfig, ShapeConfig, OptimConfig
 from repro.configs import get_tiny_config
 from repro.checkpoint import CheckpointManager
@@ -16,10 +16,11 @@ from repro.train import Trainer
 
 
 def test_full_workflow(tmp_path):
-    net = Network()
-    s = ussh_login("sci", net, str(tmp_path / "laptop"),
-                   str(tmp_path / "pod"),
-                   mounts={"home/": ["home/scratch/raw/"]})
+    fab = Fabric(FabricSpec.star(str(tmp_path / "laptop"),
+                                 str(tmp_path / "pod")))
+    net = fab.network
+    s = fab.login("sci", mounts=[MountSpec("home/",
+                                           ("home/scratch/raw/",))])
     cfg = get_tiny_config("qwen3-4b")
 
     # 1-3: code + input data prepared at home, imported at the pod

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import Network, ussh_login
+from repro.core import Fabric, FabricSpec, MountSpec
 from repro.config import RunConfig, ShapeConfig, OptimConfig
 from repro.configs import get_tiny_config
 from repro.checkpoint import CheckpointManager
@@ -19,9 +19,8 @@ from repro.train.step import make_train_step, make_opt_state
 
 def _mk_trainer(tmp_path, *, monitor=None, micro=1, steps_total=60,
                 grad_compress="none"):
-    net = Network()
-    s = ussh_login("sci", net, str(tmp_path / "h"), str(tmp_path / "s"),
-                   mounts={"home/": ["home/scratch/"]})
+    s = Fabric(FabricSpec.star(str(tmp_path / "h"), str(tmp_path / "s"))) \
+        .login("sci", mounts=[MountSpec("home/", ("home/scratch/",))])
     cfg = get_tiny_config("qwen3-4b")
     run = RunConfig(model=cfg, shape=ShapeConfig("t", "train", 32, 4),
                     optim=OptimConfig(lr=1e-3, warmup_steps=5,
