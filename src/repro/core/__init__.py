@@ -21,6 +21,10 @@ from repro.core.replication import (  # noqa: F401
     PendingApply, Replica, ReplicaCatalog, ReplicaSet, WritePolicy,
 )
 from repro.core.lease import LeaseManager  # noqa: F401
+from repro.core.tasks import (  # noqa: F401
+    DeadLetter, LockTable, MaintenanceReport, MaintenanceScheduler,
+    MaintenanceSpec, RetryPolicy, ScheduledTask,
+)
 from repro.core.namespace import XufsClient, XufsFile, Mount  # noqa: F401
 from repro.core.prefetch import Prefetcher  # noqa: F401
 from repro.core.session import Session, UserFileServer, ussh_login  # noqa: F401
@@ -45,6 +49,9 @@ __all__ = [
     # coherency / replication / leases
     "NotificationManager", "PendingApply", "Replica", "ReplicaCatalog",
     "ReplicaSet", "WritePolicy", "LeaseManager",
+    # background maintenance plane (docs/maintenance.md)
+    "MaintenanceSpec", "MaintenanceScheduler", "MaintenanceReport",
+    "RetryPolicy", "ScheduledTask", "DeadLetter", "LockTable",
     # client
     "XufsClient", "XufsFile", "Mount", "Prefetcher",
 ]

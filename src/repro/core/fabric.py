@@ -47,7 +47,12 @@ from repro.core.namespace import XufsClient
 from repro.core.replication import ReplicaSet, WritePolicy
 from repro.core.session import Session, UserFileServer, _authenticate
 from repro.core.store import HomeStore
-from repro.core.transport import Endpoint, KeyPhrase, LinkModel, Network
+from repro.core.tasks import (
+    MaintenanceReport, MaintenanceScheduler, MaintenanceSpec,
+)
+from repro.core.transport import (
+    DisconnectedError, Endpoint, KeyPhrase, LinkModel, Network,
+)
 
 
 def _pair(a: str, b: str) -> Tuple[str, str]:
@@ -168,6 +173,13 @@ class FabricSpec:
     sites: Tuple[SiteSpec, ...] = ()
     links: Tuple[LinkSpec, ...] = ()
     link: LinkModel = field(default_factory=LinkModel)
+    #: Background maintenance plane (``docs/maintenance.md``): when set,
+    #: the Fabric owns ONE MaintenanceScheduler shared by all logins and
+    #: every login/attach registers its resync / read-repair drain /
+    #: lease-renewal / oplog-reconcile tasks on it.  Unset (default) ⇒
+    #: no scheduler exists and every wire event is bit-identical to the
+    #: pre-maintenance fabric.
+    maintenance: Optional[MaintenanceSpec] = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "sites", tuple(self.sites))
@@ -260,6 +272,14 @@ class Fabric:
         self.network = network if network is not None \
             else Network(link=_dc_replace(spec.link))
         self.sessions: List[Session] = []
+        #: ONE scheduler per fabric, shared by every login/attach — the
+        #: per-path lock table and the counters span all sessions, which
+        #: is what makes "two sessions never double-repair a path" a
+        #: fabric-level guarantee rather than a per-client hope.
+        self.scheduler: Optional[MaintenanceScheduler] = None
+        if spec.maintenance is not None:
+            self.scheduler = MaintenanceScheduler(self.network,
+                                                  spec.maintenance)
         for site in spec.sites:
             Endpoint(site.name, self.network)
             if site.nic_budget is not None:
@@ -288,6 +308,93 @@ class Fabric:
                 f"site {name!r} declares no filesystem root; a {what} "
                 "needs one (SiteSpec(root=...) or the login override)")
         return root
+
+    # ---- background maintenance ------------------------------------------
+    def maintenance_report(self) -> Optional[MaintenanceReport]:
+        """Snapshot of the maintenance plane (None when no
+        :class:`MaintenanceSpec` was declared)."""
+        return self.scheduler.report() if self.scheduler is not None \
+            else None
+
+    def _register_maintenance(self, owner: str, site: str, home: str,
+                              client: XufsClient,
+                              rset: Optional[ReplicaSet]) -> None:
+        """Register one session's periodic upkeep on the shared scheduler.
+
+        Task closures read the client's live mount/lease tables at run
+        time, so a later ``remount()`` (which swaps LeaseManagers and
+        tokens) is picked up without re-registration.  Registration
+        itself touches no wire.
+        """
+        sched = self.scheduler
+        if sched is None:
+            return
+        spec = self.spec.maintenance
+        tag = f"{owner}@{site}"
+        net = self.network
+
+        def lease_tick() -> int:
+            # renewal first; anything a partition leaves at risk is
+            # re-verified on the next (retry) tick once the link heals.
+            # Unresolved at-risk leases are a task FAILURE: the retry
+            # ladder (and ultimately the dead-letter record) makes a
+            # silently-expiring lock an observable event.
+            renewed = 0
+            at_risk = 0
+            for lm in client.leases.values():
+                if lm.at_risk:
+                    lm.reverify_at_risk()
+                renewed += lm.renew_all()
+                at_risk += len(lm.at_risk)
+            if at_risk:
+                raise DisconnectedError(
+                    f"{tag}: {at_risk} lease(s) at risk after renewal")
+            return renewed
+
+        sched.register(f"lease:{tag}", lease_tick,
+                       period_s=spec.lease_period_s, owner=tag)
+
+        def reconcile_tick() -> int:
+            return client.reconcile()
+
+        sched.register(f"reconcile:{tag}", reconcile_tick,
+                       period_s=spec.reconcile_period_s, owner=tag)
+
+        if rset is None:
+            return
+        key = sched.rset_key(rset)
+
+        def resync_tick() -> int:
+            # anti-entropy originates at the client site: a partition
+            # between site and home fails the task into the retry /
+            # backoff / dead-letter ladder instead of silently skipping
+            # convergence
+            net.rpc(site, home, "resync_vector")
+            if not sched.locks.acquire(f"{key}/resync", tag,
+                                       now=net.clock):
+                return 0      # a peer session is already resyncing
+            parked = {r.path for r in client.oplog.unreconciled()}
+            return rset.resync(skip=parked)
+
+        sched.register(f"resync:{tag}", resync_tick,
+                       period_s=spec.resync_period_s, owner=tag)
+
+        def repair_tick() -> int:
+            launched = 0
+            for path in rset.repair_targets():
+                if not sched.locks.acquire(f"{key}/{path}", tag,
+                                           now=net.clock):
+                    continue  # a peer holds the repair lease: skip, never
+                    #           double-repair (the conflict is counted)
+                pending = rset.begin_repair_path(path)
+                if pending:
+                    sched.note_repair(f"{key}/{path}", tag)
+                    sched.track(rset, pending)
+                    launched += 1
+            return launched
+
+        sched.register(f"repair:{tag}", repair_tick,
+                       period_s=spec.repair_period_s, owner=tag)
 
     # ---- sessions --------------------------------------------------------
     def login(self, user: str, *, home: str = "home", site: str = "site",
@@ -364,8 +471,10 @@ class Fabric:
             mount_specs[ms.prefix] = ms
         session = Session(user=user, network=self.network, server=server,
                           client=client, token=token, replicas=rset,
-                          mount_specs=mount_specs)
+                          mount_specs=mount_specs,
+                          scheduler=self.scheduler)
         self.sessions.append(session)
+        self._register_maintenance(user, site, home, client, rset)
         return session
 
     def attach(self, session: Session, site: str, *, owner: str,
@@ -390,4 +499,10 @@ class Fabric:
                          session.server.store, token,
                          localized=list(ms.localized),
                          replicas=session.replicas)
+        # the attached reader shares the session's replica fabric, so its
+        # repair task competes for the SAME per-path locks — this is the
+        # two-sessions-never-double-repair case the lock table exists for
+        self._register_maintenance(owner, site,
+                                   session.server.endpoint.name, client,
+                                   session.replicas)
         return client

@@ -8,7 +8,7 @@ than orphan.  Files in *localized directories* use cache-space-local locks
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Set
+from typing import Set, Tuple
 
 from repro.core.store import HomeStore
 from repro.core.transport import DisconnectedError, Network
@@ -27,6 +27,12 @@ class LeaseManager:
     ttl: float = DEFAULT_TTL
     held: Set[str] = field(default_factory=set)
     local_locks: Set[str] = field(default_factory=set)
+    #: Leases we hold but could not confirm with the server (a partition
+    #: interrupted renewal, or a re-mount rotated the token): the
+    #: server-side TTL keeps running, so these must be re-verified (or
+    #: dropped) before the client may keep acting as lock holder.
+    at_risk: Set[str] = field(default_factory=set)
+    renew_interruptions: int = 0
 
     def acquire(self, path: str, localized: bool = False) -> bool:
         if localized:
@@ -53,6 +59,7 @@ class LeaseManager:
             except DisconnectedError:
                 pass   # lease will expire server-side
             self.held.discard(path)
+            self.at_risk.discard(path)
 
     def renew_all(self) -> int:
         """Periodic renewal; drops leases the server no longer honors.
@@ -60,20 +67,66 @@ class LeaseManager:
         Renewals are independent round-trips, so they ride the channel
         pool concurrently — one RTT per ``channels_per_pair`` leases, not
         one per lease.
+
+        A partition mid-renewal leaves every not-yet-probed lease
+        **at risk**: the server-side TTL keeps running while we cannot
+        reach it, so those paths move to ``at_risk`` instead of silently
+        staying in ``held`` as if renewed (the old behavior — the client
+        kept acting as lock holder after the server expired the lease).
+        :meth:`reverify_at_risk` settles them once the link heals.
         """
         renewed = 0
         probes = []
-        for path in list(self.held):
+        paths = sorted(self.held)        # deterministic probe order
+        cut = len(paths)
+        for i, path in enumerate(paths):
             try:
                 probes.append((path, self.network.transfer(
                     self.client_name, self.server_name, "lock_renew")))
             except DisconnectedError:
-                break            # WAN down: only the issued renewals count
+                cut = i          # WAN down: the remainder was never probed
+                self.renew_interruptions += 1
+                break
         self.network.wait_all([t for _, t in probes])
         for path, _t in probes:
             if self.store.renew_lock(self.token, path, self.owner, self.ttl,
                                      self.network.clock):
                 renewed += 1
+                self.at_risk.discard(path)
             else:
                 self.held.discard(path)
+                self.at_risk.discard(path)
+        for path in paths[cut:]:
+            if path in self.held:
+                self.at_risk.add(path)
         return renewed
+
+    def reverify_at_risk(self) -> Tuple[int, int]:
+        """Settle leases left at risk by an interrupted renewal.
+
+        Re-probes the server for each at-risk path: a lease it still
+        honors is renewed and kept; one it expired (or re-granted to
+        another owner) is dropped from ``held`` — holding a lock on hope
+        alone is exactly the corruption the at-risk set exists to stop.
+        Called from ``XufsClient.reconnect()`` and the scheduled lease
+        task.  Returns ``(kept, dropped)``; if the WAN is still down,
+        everything left unprobed stays at risk.
+        """
+        kept = dropped = 0
+        probes = []
+        for path in sorted(self.at_risk):
+            try:
+                probes.append((path, self.network.transfer(
+                    self.client_name, self.server_name, "lock_reverify")))
+            except DisconnectedError:
+                break            # still partitioned: the rest stay at risk
+        self.network.wait_all([t for _, t in probes])
+        for path, _t in probes:
+            if self.store.renew_lock(self.token, path, self.owner, self.ttl,
+                                     self.network.clock):
+                kept += 1
+            else:
+                self.held.discard(path)
+                dropped += 1
+            self.at_risk.discard(path)
+        return kept, dropped

@@ -141,9 +141,20 @@ class XufsClient:
                                  store, self.cache, prefix=prefix)
         nm.register(token)
         self.notifiers[prefix] = nm
-        self.leases[prefix] = LeaseManager(
+        lm = LeaseManager(
             self.network, self.name, server_name, store, owner=self.owner,
             token=token)
+        old_lm = self.leases.get(prefix)
+        if old_lm is not None and old_lm.store is store:
+            # a re-mount rotates the token but must not forget which
+            # locks this client believes it holds: carry them over AT
+            # RISK — the server may have expired them while we were away
+            # (crash/partition is why remounts happen) — and let
+            # reverify_at_risk() settle them on reconnect
+            lm.local_locks = old_lm.local_locks
+            lm.held = old_lm.held
+            lm.at_risk = old_lm.at_risk | set(old_lm.held)
+        self.leases[prefix] = lm
         return m
 
     def _mount_for(self, path: str) -> Mount:
@@ -508,6 +519,12 @@ class XufsClient:
                 stale += nm.reconnect(m.token)
             except DisconnectedError:
                 continue             # home still down: stay disconnected
+            lm = self.leases.get(prefix)
+            if lm is not None and lm.at_risk:
+                # leases a partition-interrupted renewal (or a token
+                # rotation) left unconfirmed: re-verify with the server
+                # now that the channel is back, dropping any it expired
+                lm.reverify_at_risk()
         self.reconcile()
         return stale
 

@@ -553,9 +553,10 @@ class ReplicaSet:
             if path in skip:
                 continue
             blob = None       # home disk read shared across replicas
+            target = hv
             for rep in self.replicas.values():
                 held = self.catalog.version_at(path, rep.name)
-                if held is not None and held >= hv:
+                if held is not None and held >= target:
                     rep.lagging.discard(path)
                     continue
                 if blob is None:
@@ -563,6 +564,22 @@ class ReplicaSet:
                         blob = self.home_store.get(self.token, path)
                     except FileNotFoundError:
                         break   # deleted since the vector snapshot
+                    data, st = blob
+                    if st.version != target:
+                        # a home write landed between the vector snapshot
+                        # and this fetch: the fetched bytes are what every
+                        # replica receives, so the fetched version is what
+                        # the catalog must pin — judging staleness by the
+                        # snapshot while applying the newer version left
+                        # the catalog's home view and the replica holdings
+                        # permanently divergent (visible whenever the
+                        # change-feed subscription is down, i.e. exactly
+                        # the post-crash recovery resync() serves)
+                        target = st.version
+                        self.catalog.note_home(path, target)
+                        if held is not None and held >= target:
+                            rep.lagging.discard(path)
+                            continue
                 data, st = blob
                 if self.apply_to_replica(rep.name, path, data, st.version):
                     repaired += 1
@@ -584,5 +601,52 @@ class ReplicaSet:
                 except FileNotFoundError:
                     pass
                 self.catalog.drop(path, rep.name)
+                # mirror propagate_delete: a successfully deleted path is
+                # repaired — leaving it in ``lagging`` kept a dead path on
+                # the read-repair candidate list forever
+                rep.lagging.discard(path)
                 repaired += 1
         return repaired
+
+    # ---- schedulable maintenance units -----------------------------------
+    def repair_targets(self) -> List[str]:
+        """Paths some replica still needs repaired (deferred fan-out and
+        partition leftovers), sorted so the scheduled drain walks them in
+        a deterministic order."""
+        out: Set[str] = set()
+        for rep in self.replicas.values():
+            out |= rep.lagging
+        return sorted(out)
+
+    def begin_repair_path(self, path: str) -> List[PendingApply]:
+        """Launch — without waiting — the repair of ONE path onto every
+        replica that lags or trails it: the schedulable read-repair
+        drain unit.
+
+        Home-driven third-party pushes, overlapped channel reservations;
+        the caller (the maintenance scheduler) completes each apply via
+        :meth:`complete_apply` when its ack matures, so repair wire time
+        never rides a reader's clock.  A path deleted at home while the
+        repair was queued drains the tombstone instead
+        (:meth:`propagate_delete`).  A still-partitioned replica stays
+        lagging — the next drain tick retries.
+        """
+        try:
+            data, st = self.home_store.get(self.token, path)
+        except FileNotFoundError:
+            self.propagate_delete(path)
+            return []
+        # same pin rule as resync(): the fetched version is the target
+        self.catalog.note_home(path, st.version)
+        pending: List[PendingApply] = []
+        for name, rep in self.replicas.items():
+            held = self.catalog.version_at(path, name)
+            if held is not None and held >= st.version:
+                rep.lagging.discard(path)
+                continue
+            if path not in rep.lagging and held is None:
+                continue      # never placed here: placement, not repair
+            p = self.begin_apply(name, path, data, st.version)
+            if p is not None:
+                pending.append(p)
+        return pending

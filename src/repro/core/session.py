@@ -27,6 +27,7 @@ from repro.core.transport import Endpoint, Network, respond
 
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.core.fabric import MountSpec
+    from repro.core.tasks import MaintenanceReport, MaintenanceScheduler
 
 
 @dataclass
@@ -58,6 +59,16 @@ class Session:
     replicas: Optional[ReplicaSet] = None
     #: prefix -> the MountSpec it was mounted with; remount()'s witness.
     mount_specs: Dict[str, "MountSpec"] = field(default_factory=dict)
+    #: the Fabric's shared maintenance scheduler (None when the spec
+    #: declared no MaintenanceSpec) — the session's handle for driving
+    #: background upkeep (``scheduler.run_until``) and inspecting it.
+    scheduler: Optional["MaintenanceScheduler"] = None
+
+    def maintenance_report(self) -> Optional["MaintenanceReport"]:
+        """Snapshot of the fabric's maintenance plane, or None when no
+        ``MaintenanceSpec`` was declared."""
+        return self.scheduler.report() if self.scheduler is not None \
+            else None
 
     def remount(self, prefix: Optional[str] = None,
                 localized: Optional[List[str]] = None) -> None:

@@ -1,0 +1,205 @@
+"""Lease manager: virtual-clock TTL expiry, renewal under partition,
+localized vs remote locks, and the at-risk re-verification lifecycle.
+
+The renewal-under-partition cases are regression tests for the
+``renew_all`` bug where a ``DisconnectedError`` mid-loop ``break``-ed out
+leaving every unprobed lease in ``held`` as if renewed — the client kept
+acting as lock holder after the server-side TTL expired.
+"""
+import pytest
+
+from repro.core import (
+    DisconnectedError, Endpoint, Fabric, FabricSpec, LeaseManager,
+    LinkModel, MountSpec, Network, ReplicaPolicy,
+)
+from repro.core.store import HomeStore
+from repro.core.transport import respond
+
+
+def make_store(tmp_path, network, name="home"):
+    return HomeStore(str(tmp_path / name), endpoint=network.endpoint(name))
+
+
+def authed(store):
+    return store.authenticate(lambda ch: respond(store.keyphrase, ch))
+
+
+@pytest.fixture()
+def wired(tmp_path):
+    net = Network(link=LinkModel(latency_s=0.030))
+    Endpoint("site", net)
+    Endpoint("home", net)
+    store = make_store(tmp_path, net)
+    lm = LeaseManager(net, "site", "home", store, owner="alice",
+                      token=authed(store), ttl=30.0)
+    return net, store, lm
+
+
+# ---- virtual-clock TTL expiry ----------------------------------------------
+
+def test_ttl_expiry_frees_the_lock(wired):
+    net, store, lm = wired
+    assert lm.acquire("home/shared.dat")
+    assert store.lock_owner("home/shared.dat", net.clock) == "alice"
+    net.advance(lm.ttl + 1)
+    # expired server-side: another owner can take it
+    assert store.lock_owner("home/shared.dat", net.clock) is None
+    bob = LeaseManager(net, "site", "home", store, owner="bob",
+                      token=authed(store), ttl=30.0)
+    assert bob.acquire("home/shared.dat")
+    # alice's renewal now honestly reports the loss
+    assert lm.renew_all() == 0
+    assert "home/shared.dat" not in lm.held
+
+
+def test_renewal_extends_the_ttl(wired):
+    net, store, lm = wired
+    assert lm.acquire("home/a")
+    for _ in range(4):
+        net.advance(lm.ttl / 2)
+        assert lm.renew_all() == 1
+    # 2x TTL elapsed but renewals kept it alive
+    assert store.lock_owner("home/a", net.clock) == "alice"
+
+
+# ---- renewal under partition (the renew_all bugfix) ------------------------
+
+def test_partition_marks_unprobed_leases_at_risk(wired):
+    net, store, lm = wired
+    for i in range(4):
+        assert lm.acquire(f"home/f{i}")
+    net.partition("site", "home")
+    assert lm.renew_all() == 0
+    # nothing silently "renewed": every unprobed lease is tracked at risk
+    assert lm.at_risk == {f"home/f{i}" for i in range(4)}
+    assert lm.held == {f"home/f{i}" for i in range(4)}
+    assert lm.renew_interruptions == 1
+
+
+def test_mid_loop_partition_marks_only_the_remainder(wired):
+    net, store, lm = wired
+    for i in range(4):
+        assert lm.acquire(f"home/f{i}")
+    orig = net.transfer
+    calls = {"n": 0}
+
+    def die_after_two(src, dst, method, *a, **kw):
+        if method == "lock_renew":
+            calls["n"] += 1
+            if calls["n"] > 2:
+                raise DisconnectedError("mid-renewal drop")
+        return orig(src, dst, method, *a, **kw)
+
+    net.transfer = die_after_two
+    try:
+        assert lm.renew_all() == 2           # probes f0, f1 landed
+    finally:
+        net.transfer = orig
+    assert lm.at_risk == {"home/f2", "home/f3"}
+    assert lm.held == {f"home/f{i}" for i in range(4)}
+
+
+def test_reverify_drops_leases_the_server_expired(wired):
+    net, store, lm = wired
+    for i in range(3):
+        assert lm.acquire(f"home/f{i}")
+    net.partition("site", "home")
+    lm.renew_all()
+    assert len(lm.at_risk) == 3
+    # while partitioned, the server TTL runs out and bob takes f1
+    net.advance(lm.ttl + 1)
+    bob = LeaseManager(net, "home", "home", store, owner="bob",
+                      token=authed(store), ttl=30.0)
+    assert bob.acquire("home/f1")
+    net.heal("site", "home")
+    kept, dropped = lm.reverify_at_risk()
+    # f0/f2 were expired-but-unclaimed: renew re-establishes them;
+    # f1 now belongs to bob and is dropped — alice never acts on it again
+    assert (kept, dropped) == (2, 1)
+    assert lm.held == {"home/f0", "home/f2"}
+    assert lm.at_risk == set()
+    assert store.lock_owner("home/f1", net.clock) == "bob"
+
+
+def test_reverify_while_still_partitioned_keeps_everything_at_risk(wired):
+    net, store, lm = wired
+    assert lm.acquire("home/x")
+    net.partition("site", "home")
+    lm.renew_all()
+    assert lm.reverify_at_risk() == (0, 0)
+    assert lm.at_risk == {"home/x"}
+
+
+def test_release_clears_at_risk_tracking(wired):
+    net, store, lm = wired
+    assert lm.acquire("home/x")
+    net.partition("site", "home")
+    lm.renew_all()
+    lm.release("home/x")        # disconnected release: expire server-side
+    assert lm.at_risk == set()
+    assert lm.held == set()
+
+
+# ---- localized vs remote locks ---------------------------------------------
+
+def test_localized_lock_never_touches_the_wire(tmp_path):
+    fab = Fabric(FabricSpec.star(str(tmp_path / "h"), str(tmp_path / "s")))
+    s = fab.login("sci", mounts=[MountSpec("home/",
+                                           localized=("home/scratch/",))])
+    rpc0 = s.network.rpc_count
+    assert s.client.lock("home/scratch/tmpfile")
+    s.client.unlock("home/scratch/tmpfile")
+    assert s.network.rpc_count == rpc0
+    lm = s.client.leases["home/"]
+    assert lm.local_locks == set() and lm.held == set()
+
+
+def test_remote_lock_rides_the_wan_and_survives_renewal(tmp_path):
+    fab = Fabric(FabricSpec.star(str(tmp_path / "h"), str(tmp_path / "s")))
+    s = fab.login("sci")
+    rpc0 = s.network.rpc_count
+    assert s.client.lock("home/data/shared")
+    assert s.network.rpc_count == rpc0 + 1
+    lm = s.client.leases["home/"]
+    assert lm.held == {"home/data/shared"}
+    assert lm.renew_all() == 1
+
+
+# ---- client-level reconnect reverification ---------------------------------
+
+def test_reconnect_reverifies_at_risk_leases(tmp_path):
+    fab = Fabric(FabricSpec.star(str(tmp_path / "h"), str(tmp_path / "s"),
+                                 replica_latencies={"r1": 0.005}))
+    s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",)))
+    assert s.client.lock("home/data/shared")
+    lm = s.client.leases["home/"]
+    net = s.network
+    net.partition("site", "home")
+    lm.renew_all()
+    assert lm.at_risk == {"home/data/shared"}
+    net.heal("site", "home")
+    s.client.reconnect()
+    assert lm.at_risk == set()
+    assert lm.held == {"home/data/shared"}
+    assert s.server.store.lock_owner("home/data/shared", net.clock) == "sci"
+
+
+def test_remount_carries_leases_over_at_risk(tmp_path):
+    """A re-mount rotates the token; held locks survive AT RISK until
+    re-verified rather than being silently forgotten."""
+    fab = Fabric(FabricSpec.star(str(tmp_path / "h"), str(tmp_path / "s")))
+    s = fab.login("sci")
+    assert s.client.lock("home/data/shared")
+    s.server.crash()
+    s.remount()
+    lm = s.client.leases["home/"]
+    assert lm.held == {"home/data/shared"}
+    assert "home/data/shared" in lm.at_risk
+    assert lm.token == s.token          # rotated token, not the stale one
+    kept, dropped = lm.reverify_at_risk()
+    assert (kept, dropped) == (1, 0)
+    assert store_owner(s) == "sci"
+
+
+def store_owner(s):
+    return s.server.store.lock_owner("home/data/shared", s.network.clock)

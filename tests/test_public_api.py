@@ -29,9 +29,16 @@ CORE_SURFACE = {
     "plan_stripes", "reassemble",
 }
 
+#: The maintenance plane (docs/maintenance.md).
+MAINTENANCE_SURFACE = {
+    "MaintenanceSpec", "MaintenanceScheduler", "MaintenanceReport",
+    "RetryPolicy", "ScheduledTask", "DeadLetter", "LockTable",
+}
+
 
 def test_all_covers_documented_surface():
-    missing = (SPEC_SURFACE | CORE_SURFACE) - set(core.__all__)
+    missing = (SPEC_SURFACE | CORE_SURFACE | MAINTENANCE_SURFACE) \
+        - set(core.__all__)
     assert not missing, f"repro.core.__all__ lost exports: {sorted(missing)}"
 
 
@@ -57,7 +64,10 @@ def test_spec_layer_signatures_are_stable():
     mount_fields = set(core.MountSpec.__dataclass_fields__)
     assert {"prefix", "localized"} <= mount_fields
     spec_fields = set(core.FabricSpec.__dataclass_fields__)
-    assert {"sites", "links", "link"} <= spec_fields
+    assert {"sites", "links", "link", "maintenance"} <= spec_fields
+    m_fields = set(core.MaintenanceSpec.__dataclass_fields__)
+    assert {"resync_period_s", "repair_period_s", "lease_period_s",
+            "reconcile_period_s", "retry", "lock_lease_s"} <= m_fields
 
 
 def test_deprecated_shim_still_exported():

@@ -761,3 +761,71 @@ def test_lagging_bulk_mutators_invalidate_routes(rsession):
     assert "r1" not in [n for n, _s, _t in s.replicas.route("site", path)]
     assert rep.lagging.pop() == path
     assert [n for n, _s, _t in s.replicas.route("site", path)][0] == "r1"
+
+
+# ---- resync regressions (maintenance-plane PR) ------------------------------
+
+def test_resync_delete_pass_clears_lagging(rsession):
+    """Regression: resync's delete pass removed the replica copy but
+    never cleared ``rep.lagging`` (propagate_delete did) — the dead path
+    stayed on the read-repair candidate list forever."""
+    s = rsession
+    path, _ = seed_and_sync(s, path="home/out/dead.dat")
+    net = s.client.network
+    s.server.store.delete(s.token, path)
+    net.partition("home", "r1")
+    s.replicas.resync()                 # delete can't reach r1: deferred
+    rep = s.replicas.replicas["r1"]
+    assert path in rep.lagging
+    assert path in s.replicas.catalog.paths_at("r1")
+    net.heal("home", "r1")
+    s.replicas.resync()                 # the delete lands...
+    assert path not in rep.lagging      # ...and the lag clears with it
+    assert path not in s.replicas.catalog.paths_at("r1")
+    with pytest.raises(FileNotFoundError):
+        rep.store.get(rep.token, path)
+
+
+def test_resync_pins_the_version_it_fetched(rsession):
+    """Regression: a home write landing between resync's vector snapshot
+    and its blob fetch was applied to replicas at the *newer* fetched
+    version while the catalog kept the snapshot's — home view and
+    replica holdings permanently divergent whenever the change-feed
+    subscription is down, which is exactly the post-crash recovery
+    resync serves."""
+    from repro.core.transport import respond
+
+    s = rsession
+    path, _ = seed_and_sync(s, path="home/out/race.bin")      # v1
+    store = s.server.store
+    store.put(s.token, path, b"B" * 100_000)                  # v2 at home
+    s.server.crash()        # change feed dead: the race cannot self-heal
+    token = store.authenticate(lambda ch: respond(store.keyphrase, ch))
+    s.replicas.token = token          # the post-crash sync tool's state
+    racing = b"C" * 120_000
+    real_get = store.get
+    fired = {"done": False}
+
+    def racing_get(tok, p):
+        if p == path and not fired["done"]:
+            fired["done"] = True
+            store.get = real_get      # the racing writer is a bystander
+            store.put(token, p, racing)           # v3 lands mid-resync
+        return real_get(tok, p)
+
+    store.get = racing_get
+    try:
+        s.replicas.resync()
+    finally:
+        store.get = real_get
+    assert fired["done"]
+    cat = s.replicas.catalog
+    st = store.stat_unchecked(path)
+    assert st.version == 3
+    assert cat.home_version(path) == st.version   # pinned, not snapshot
+    for name in ("r1", "r2"):
+        assert cat.version_at(path, name) == st.version
+        rep = s.replicas.replicas[name]
+        data, rst = rep.store.get(rep.token, path)
+        assert data == racing and rst.version == st.version
+    assert sorted(cat.fresh_holders(path)) == ["r1", "r2"]

@@ -1,0 +1,322 @@
+"""Maintenance plane: scheduler, retry/backoff ladder, dead-letter
+lifecycle, per-path lock table, and the fabric wiring.
+
+Unit tests drive a bare :class:`MaintenanceScheduler` on a raw
+:class:`Network`; integration tests go through ``FabricSpec.star(...)``
+with a :class:`MaintenanceSpec` attached and assert the four registered
+task families behave (convergence via scheduled resync, lease
+dead-letter under partition + revive after heal, never-double-repair
+across two sessions sharing one replica set, and the zero-cost
+guarantee: a scheduler that never ticks leaves the trace bit-identical).
+"""
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    Fabric, FabricSpec, LinkModel, LockTable, MB, MaintenanceSpec,
+    MountSpec, Network, ReplicaPolicy, RetryPolicy, SiteSpec,
+)
+from repro.core.tasks import MaintenanceScheduler
+
+HOME_LATENCY = 0.060
+
+
+def sched_on(net=None, **spec_kw):
+    net = net or Network()
+    return net, MaintenanceScheduler(net, MaintenanceSpec(**spec_kw))
+
+
+def mfab(tmp_path, tag="m", replica_latencies=None, maintenance=None,
+         extra_sites=()):
+    spec = FabricSpec.star(str(tmp_path / f"home-{tag}"),
+                           str(tmp_path / f"site-{tag}"),
+                           replica_latencies=replica_latencies,
+                           link=LinkModel(latency_s=HOME_LATENCY),
+                           extra_sites=extra_sites)
+    return Fabric(dataclasses.replace(
+        spec, maintenance=maintenance or MaintenanceSpec()))
+
+
+# ---- RetryPolicy ------------------------------------------------------------
+
+def test_backoff_ladder_is_deterministic_and_capped():
+    p = RetryPolicy(max_retries=6, base_delay_s=1.0, multiplier=2.0,
+                    max_delay_s=5.0)
+    assert [p.delay_s(k) for k in range(1, 6)] == [1.0, 2.0, 4.0, 5.0, 5.0]
+
+
+@pytest.mark.parametrize("kw", [
+    dict(max_retries=-1),
+    dict(base_delay_s=0.0),
+    dict(multiplier=0.5),
+    dict(max_delay_s=0.5),          # < base_delay_s
+])
+def test_retry_policy_validation(kw):
+    with pytest.raises(ValueError):
+        RetryPolicy(**kw)
+
+
+def test_maintenance_spec_validation():
+    with pytest.raises(ValueError):
+        MaintenanceSpec(repair_period_s=0.0)
+    with pytest.raises(ValueError):
+        MaintenanceSpec(lock_lease_s=-1.0)
+
+
+# ---- registration / periodic execution --------------------------------------
+
+def test_periodic_task_runs_once_per_period():
+    net, sched = sched_on()
+    runs = []
+    sched.register("beat", lambda: runs.append(net.clock), period_s=10.0)
+    assert sched.run_until(35.0) == 35.0          # advance_to_stop
+    assert runs == [10.0, 20.0, 30.0]
+    assert sched.tasks["beat"].next_due == 40.0
+    assert sched.report().tasks_run == 3
+
+
+def test_duplicate_and_invalid_registration():
+    _, sched = sched_on()
+    sched.register("x", lambda: None, period_s=1.0)
+    with pytest.raises(ValueError):
+        sched.register("x", lambda: None, period_s=1.0)
+    with pytest.raises(ValueError):
+        sched.register("y", lambda: None, period_s=0.0)
+
+
+def test_tasks_due_together_run_in_registration_order():
+    net, sched = sched_on()
+    order = []
+    sched.register("second-name", lambda: order.append("b"), period_s=5.0)
+    sched.register("a-first-alphabetically", lambda: order.append("a"),
+                   period_s=5.0)
+    sched.run_until(5.0)
+    assert order == ["b", "a"]
+
+
+def test_first_due_pins_the_initial_run():
+    net, sched = sched_on()
+    runs = []
+    sched.register("late", lambda: runs.append(net.clock), period_s=10.0,
+                   first_due=3.0)
+    sched.run_until(14.0)
+    assert runs == [3.0, 13.0]
+
+
+def test_tick_at_fixed_clock_is_idempotent_when_nothing_due():
+    net, sched = sched_on()
+    sched.register("t", lambda: None, period_s=10.0)
+    assert sched.tick() == 0
+    net.advance(10.0)
+    assert sched.tick() == 1
+    assert sched.tick() == 0          # already ran; next due is 20.0
+
+
+# ---- retry ladder -> dead letter -> revive ----------------------------------
+
+def test_failing_task_dead_letters_with_backoff_history():
+    net, sched = sched_on()
+
+    def boom():
+        raise RuntimeError("disk on fire")
+
+    sched.register("bad", boom, period_s=10.0, owner="sci@site")
+    sched.run_until(100.0)
+    # due at 10 fails, retries at 11/13/17 fail -> dead-lettered at 17
+    r = sched.report()
+    assert (r.tasks_run, r.retries, r.dead_lettered) == (4, 3, 1)
+    assert r.tasks["bad"]["dead"] is True
+    dl = r.dead_letters[0]
+    assert dl.task == "bad" and dl.owner == "sci@site"
+    assert dl.attempts == 4                      # initial + 3 retries
+    assert dl.backoff_s == (1.0, 2.0, 4.0)       # the ladder, verbatim
+    assert dl.first_failed_at == 10.0 and dl.dead_at == 17.0
+    assert len(dl.errors) == 4
+    assert all("disk on fire" in e for e in dl.errors)
+    assert sched.next_event() is None            # removed from the schedule
+
+
+def test_success_closes_the_failure_episode():
+    net, sched = sched_on()
+    fails = {"n": 2}
+
+    def flaky():
+        if fails["n"]:
+            fails["n"] -= 1
+            raise TimeoutError("transient")
+        return "ok"
+
+    sched.register("flaky", flaky, period_s=10.0)
+    sched.run_until(13.0)               # 10 fail, 11 fail, 13 success
+    t = sched.tasks["flaky"]
+    assert t.attempt == 0 and t.backoff_s == [] and t.errors == []
+    assert t.first_failed_at is None and not t.dead
+    assert t.last_result == "ok"
+    assert t.next_due == 23.0           # back on the periodic cadence
+    assert sched.report().retries == 2 and sched.report().dead_lettered == 0
+
+
+def test_revive_restores_a_dead_task_with_a_clean_episode():
+    net, sched = sched_on()
+    broken = {"yes": True}
+
+    def sometimes():
+        if broken["yes"]:
+            raise ConnectionError("wan down")
+        return 1
+
+    sched.register("resync", sometimes, period_s=10.0)
+    sched.run_until(30.0)
+    assert sched.tasks["resync"].dead
+    broken["yes"] = False               # the heal
+    t = sched.revive("resync", delay_s=2.0)
+    assert not t.dead and t.attempt == 0 and t.next_due == 32.0
+    sched.run_until(32.0)
+    r = sched.report()
+    assert r.tasks["resync"]["dead"] is False
+    assert sched.tasks["resync"].last_result == 1
+    assert len(r.dead_letters) == 1     # the record is history, kept
+
+
+def test_revive_on_a_live_task_is_a_no_op():
+    net, sched = sched_on()
+    sched.register("fine", lambda: None, period_s=10.0)
+    before = sched.tasks["fine"].next_due
+    assert sched.revive("fine").next_due == before
+
+
+# ---- lock table -------------------------------------------------------------
+
+def test_lock_conflicts_are_counted_not_blocked():
+    lt = LockTable(lease_s=30.0)
+    assert lt.acquire("rs0/a", "sci@site", now=0.0)
+    assert not lt.acquire("rs0/a", "bob@site2", now=5.0)
+    assert lt.conflicts == 1
+    assert lt.holder("rs0/a", 5.0) == "sci@site"
+
+
+def test_same_owner_reacquire_extends_the_lease():
+    lt = LockTable(lease_s=30.0)
+    assert lt.acquire("k", "sci", now=0.0)
+    assert lt.acquire("k", "sci", now=25.0)       # extend, not conflict
+    assert lt.conflicts == 0
+    assert lt.holder("k", 50.0) == "sci"          # alive: 25 + 30 > 50
+    assert lt.holder("k", 55.0) is None
+
+
+def test_expired_lock_is_free_and_release_is_owner_checked():
+    lt = LockTable(lease_s=10.0)
+    lt.acquire("k", "sci", now=0.0)
+    assert lt.acquire("k", "bob", now=11.0)       # expired: no conflict
+    assert lt.conflicts == 0
+    lt.release("k", "sci")                        # not the holder: no-op
+    assert lt.holder("k", 12.0) == "bob"
+    lt.release("k", "bob")
+    assert lt.holder("k", 12.0) is None
+    with pytest.raises(ValueError):
+        LockTable(lease_s=0.0)
+
+
+# ---- fabric integration -----------------------------------------------------
+
+def test_scheduled_resync_converges_a_replica(tmp_path):
+    fab = mfab(tmp_path, replica_latencies={"r1": 0.005})
+    s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",)))
+    assert s.scheduler is fab.scheduler           # one plane per fabric
+    payload = b"A" * (1 * MB)
+    s.server.store.put(s.token, "home/d/x.bin", payload)
+    t0 = s.network.clock
+    s.scheduler.run_until(t0 + 31.0)              # past resync_period_s
+    s.scheduler.quiesce()
+    with s.client.open("home/d/x.bin") as f:
+        assert f.read() == payload
+    assert s.client.cache.fills_from == {"r1": 1}  # replica, not home
+    r = s.maintenance_report()
+    assert set(r.tasks) == {"lease:sci@site", "reconcile:sci@site",
+                            "resync:sci@site", "repair:sci@site"}
+    assert r.tasks_run > 0 and r.dead_lettered == 0
+
+
+def test_lease_task_dead_letters_under_partition_and_revives(tmp_path):
+    fab = mfab(tmp_path)
+    s = fab.login("sci")
+    assert s.client.lock("home/d/f")
+    net = s.network
+    t0 = net.clock
+    net.partition("site", "home")
+    s.scheduler.run_until(t0 + 40.0)
+    # lease renewal fails at t0+10, retries at +11/+13/+17, then dies
+    r = s.maintenance_report()
+    assert r.dead_lettered == 1
+    dl = r.dead_letters[0]
+    assert dl.task == "lease:sci@site"
+    assert dl.attempts == 4 and dl.backoff_s == (1.0, 2.0, 4.0)
+    lm = s.client.leases["home/"]
+    assert lm.at_risk == {"home/d/f"}      # honest: unconfirmed, not held
+    net.heal("site", "home")
+    s.scheduler.revive("lease:sci@site")
+    s.scheduler.run_until(net.clock + 11.0)
+    r = s.maintenance_report()
+    assert r.tasks["lease:sci@site"]["dead"] is False
+    assert r.dead_lettered == 1            # history, not a live failure
+    assert lm.at_risk == set() and lm.held == {"home/d/f"}
+    assert s.server.store.lock_owner("home/d/f", net.clock) == "sci"
+
+
+def test_two_sessions_never_double_repair_one_path(tmp_path):
+    """login + attach share one ReplicaSet; both repair tasks see the
+    same lagging path while the first repair's ack is still in flight —
+    the per-path lock turns the race into a counted conflict, never a
+    second repair."""
+    fab = mfab(tmp_path, replica_latencies={"r1": 0.005},
+               extra_sites=(SiteSpec("site2",
+                                     root=str(tmp_path / "site2")),))
+    s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",)))
+    fab.attach(s, "site2", owner="bob", mounts=[MountSpec("home/")])
+    path = "home/out/hot.bin"
+    payload = b"A" * (1 * MB)
+    net = s.network
+    with s.client.open(path, "w") as f:
+        f.write(payload)
+    net.partition("home", "r1")
+    assert s.client.pump() == 1     # home acked; replica fan-out deferred
+    net.heal("home", "r1")
+    rep = s.replicas.replicas["r1"]
+    assert path in rep.lagging
+    sched = s.scheduler
+    now = net.clock
+    for name in ("repair:sci@site", "repair:bob@site2"):
+        assert name in sched.tasks                 # attach registered too
+        sched.tasks[name].next_due = now + 1.0     # the race, made exact
+    sched.run_until(now + 1.0)
+    r = fab.maintenance_report()
+    assert r.repairs == 1                # exactly one launch...
+    assert r.lock_conflicts >= 1         # ...the loser skipped, counted
+    assert r.double_repairs == 0         # and never a second repair
+    sched.quiesce()
+    assert path not in rep.lagging
+    assert rep.store.get(rep.token, path)[0] == payload
+
+
+def test_unticked_scheduler_leaves_the_trace_bit_identical(tmp_path):
+    """MaintenanceSpec set but never ticked ⇒ every wire event identical
+    to a fabric with no maintenance plane at all (the zero-cost gate)."""
+    def drive(fab):
+        s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",)))
+        payload = b"C" * (2 * MB)
+        with s.client.open("home/d/y.bin", "w") as f:
+            f.write(payload)
+        s.client.pump()
+        with s.client.open("home/d/y.bin") as f:
+            assert f.read() == payload
+        return s.network.trace
+
+    plain_spec = FabricSpec.star(str(tmp_path / "home-p"),
+                                 str(tmp_path / "site-p"),
+                                 replica_latencies={"r1": 0.005},
+                                 link=LinkModel(latency_s=HOME_LATENCY))
+    plain = drive(Fabric(plain_spec))
+    scheduled = drive(mfab(tmp_path, tag="q",
+                           replica_latencies={"r1": 0.005}))
+    assert plain == scheduled
