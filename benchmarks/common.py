@@ -48,6 +48,26 @@ def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}")
 
 
+def cache_fill_totals(clients) -> Dict[str, int]:
+    """Aggregate fills-by-source over many clients through the typed
+    ``CacheSpace.stats()`` snapshot — reporting reads the snapshot, not
+    the cache's raw dicts."""
+    totals: Dict[str, int] = {}
+    for cl in clients:
+        for src, n in cl.cache.stats().fills_from.items():
+            totals[src] = totals.get(src, 0) + n
+    return totals
+
+
+def emit_cache_stats(prefix: str, cache) -> None:
+    """One ``<prefix>/cache`` row from a :class:`CacheStats` snapshot:
+    hit rate, total fills, and live resident bytes."""
+    st = cache.stats()
+    emit(f"{prefix}/cache", 0.0,
+         f"hit_rate={st.hit_rate:.2f};fills={st.fills};"
+         f"resident={st.bytes_resident}")
+
+
 def endpoint_utilization(net) -> Dict[str, Tuple[float, float, int]]:
     """Per-endpoint ``(channel_busy_s, busy_fraction, bytes)``.
 

@@ -1,0 +1,355 @@
+"""Capacity-aware replica placement & eviction (GridFTP replica line).
+
+A replica near the readers holding only ~10% of the home space must
+still capture the large majority of read traffic: the working set is
+what matters, not the mirror (SCISPACE's geo-workspace observation).
+Four self-gating scenarios on the virtual WAN clock:
+
+  A. **Capacity census.**  A home space of N objects; a replica bounded
+     at ~10% of the bytes by an ``EvictionSpec``; waves of attach
+     readers sweep a rotating hot set while the scheduled ``evict:``
+     task trims between phases.  Gates: replica serves the majority of
+     fills; ``peak_resident_bytes`` never exceeds ``capacity``; the
+     scheduler actually evicted between phases.
+  B. **Evict/repair share one LockTable.**  An eviction takes the
+     per-path lease; the same path is rewritten during a partition and
+     becomes a repair target while the evictor's lease is live.  Gates:
+     ``double_repairs == 0``, the contention is a counted
+     ``lock_conflicts``, and the path converges after the lease expires.
+  C. **Quorum-parked bytes are not eviction fodder.**  A majority write
+     assembled around a dead home parks at the replicas — the only
+     durable copies.  The evict scan runs far over the high watermark.
+     Gates: zero parked paths evicted; the freshness floor holds.
+  D. **Zero-cost guarantee.**  Eviction unset ⇒ the transport trace is
+     bit-identical to a fabric with no maintenance plane at all; the
+     deprecated ``capacity_bytes=`` alias wires bit-identically to the
+     explicit ``EvictionSpec``.
+
+Rows:
+
+  eviction/replica_capture_frac       scenario A (> 0.5 gated)
+  eviction/peak_resident_frac         scenario A (<= 1.0 gated)
+  eviction/scheduled_evictions        scenario A (> 0 gated)
+  eviction/admission_refusals         scenario A, observability
+  eviction/lock_conflicts             scenario B (> 0 gated)
+  eviction/double_repairs             scenario B (== 0 gated)
+  eviction/parked_evicted             scenario C (== 0 gated)
+  eviction/unset_trace_identical      scenario D
+  eviction/alias_trace_identical      scenario D
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import cache_fill_totals, emit, star_fabric, timed
+
+HOME_LATENCY = 0.060
+
+
+def _armed_fabric(home_root, site_root, *, replica_latencies,
+                  extra_sites=(), maintenance=None):
+    import dataclasses
+
+    from repro.core import Fabric, MaintenanceSpec
+
+    fab = star_fabric(home_root, site_root, latency_s=HOME_LATENCY,
+                      replica_latencies=replica_latencies,
+                      extra_sites=extra_sites)
+    spec = dataclasses.replace(fab.spec,
+                               maintenance=maintenance or MaintenanceSpec())
+    return Fabric(spec)
+
+
+# ---- scenario A: 10%-capacity replica still captures the traffic -----------
+
+def _capacity_census(root: str, n_files: int, size: int, readers: int):
+    """Rotating hot-set sweep against a replica capped at ~10% bytes.
+
+    Each phase, fresh attach readers sweep that phase's hot set: the
+    first touch of a path fills from home and demand-places it at the
+    replica (read repair IS placement); every further reader fills from
+    the replica.  Between phases the scheduled evict task trims the
+    now-cold set, so the next hot set has room.
+    """
+    from repro.core import (EvictionSpec, MaintenanceSpec, MountSpec,
+                            ReplicaPolicy)
+
+    hot_per_phase = 3
+    phases = 3
+    capacity = (n_files * size) // 10            # ~10% of home-space bytes
+    assert hot_per_phase * size <= capacity
+    # high watermark below one hot set's bytes (0.75 cap): the scan
+    # between phases always trims; low leaves room for the next hot set
+    ev = EvictionSpec(capacity=capacity, high_watermark=0.7,
+                      low_watermark=0.25, scan_period_s=5.0)
+    spec = MaintenanceSpec(resync_period_s=1e6, repair_period_s=1e6,
+                           lease_period_s=1e6, reconcile_period_s=1e6)
+    fab = _armed_fabric(f"{root}/home-cc", f"{root}/site-cc",
+                        replica_latencies={"r1": 0.005}, maintenance=spec)
+    s = fab.login("owner", replicas=ReplicaPolicy(sites=("r1",),
+                                                  eviction=ev))
+    for i in range(n_files):
+        s.server.store.put(s.token, f"home/data/f{i}.bin",
+                           bytes([65 + i % 26]) * size)
+    rep = s.replicas.replicas["r1"]
+    clients = []
+    for phase in range(phases):
+        hot = [f"home/data/f{i}.bin"
+               for i in range(phase * hot_per_phase,
+                              (phase + 1) * hot_per_phase)]
+        for c in range(readers):
+            cl = fab.attach(s, "site", owner=f"p{phase}r{c}",
+                            mounts=[MountSpec("home/")])
+            clients.append(cl)
+            for p in hot:
+                with cl.open(p) as f:
+                    assert len(f.read()) == size
+        # think time between phases: the evict task trims the cold set
+        s.scheduler.run_until(s.network.clock + ev.scan_period_s + 0.5)
+    s.scheduler.quiesce()
+    fills = cache_fill_totals(clients)
+    home_fills = fills.get("home", 0)
+    rep_fills = fills.get("r1", 0)
+    capture = rep_fills / max(home_fills + rep_fills, 1)
+    peak_frac = rep.peak_resident_bytes / capacity
+    report = fab.maintenance_report()
+    return (capture, peak_frac, report.evictions,
+            s.replicas.admission_refused, rep.resident_bytes <= capacity)
+
+
+# ---- scenario B: evict and repair contend one LockTable ---------------------
+
+def _evict_repair_contention(root: str, size: int):
+    """The evictor's per-path lease blocks a repair of the same path.
+
+    A trimmed path is rewritten while home<->replica is partitioned, so
+    it becomes a repair target while the evictor still holds the lease.
+    The repair tick must lose the lock (counted), never double-repair,
+    and converge once the lease expires.
+    """
+    from repro.core import (EvictionSpec, MaintenanceSpec, ReplicaPolicy)
+
+    ev = EvictionSpec(capacity=4 * size, high_watermark=0.5,
+                      low_watermark=0.25, scan_period_s=5.0)
+    spec = MaintenanceSpec(resync_period_s=1e6, lease_period_s=1e6,
+                           reconcile_period_s=1e6, repair_period_s=2.0,
+                           lock_lease_s=30.0)
+    fab = _armed_fabric(f"{root}/home-ct", f"{root}/site-ct",
+                        replica_latencies={"r1": 0.005}, maintenance=spec)
+    s = fab.login("owner", replicas=ReplicaPolicy(sites=("r1",),
+                                                  eviction=ev))
+    net, sched = s.network, s.scheduler
+    victim = "home/data/v0.bin"
+    paths = [victim] + [f"home/data/v{i}.bin" for i in range(1, 3)]
+    for p in paths:
+        with s.client.open(p, "w") as f:
+            f.write(b"V" * size)
+        s.client.pump()
+        with s.client.open(p) as f:          # touch: later paths are hotter
+            f.read()
+    rep = s.replicas.replicas["r1"]
+    # 3*size resident > high (2*size): the next scan evicts the LRU
+    # victim and HOLDS its per-path lease for lock_lease_s
+    sched.run_until(net.clock + ev.scan_period_s + 0.1)
+    evicted_at = net.clock
+    assert victim not in rep.resident
+    # rewrite the victim behind a partition: it becomes a repair target
+    net.partition("home", "r1")
+    with s.client.open(victim, "w") as f:
+        f.write(b"W" * size)
+    s.client.pump()
+    net.heal("home", "r1")
+    assert victim in rep.lagging
+    # repair ticks run while the evictor's lease is live -> conflicts;
+    # after expiry the repair lands
+    sched.run_until(evicted_at + 40.0)
+    sched.quiesce()
+    report = fab.maintenance_report()
+    converged = victim not in rep.lagging \
+        and rep.store.get(rep.token, victim)[0] == b"W" * size
+    return report, converged
+
+
+# ---- scenario C: quorum-parked bytes survive any trim -----------------------
+
+def _parked_never_evicted(root: str, size: int):
+    """Majority writes around a dead home park at the replicas; the
+    evict scan, far over its watermark, must leave every parked path."""
+    from repro.core import (EvictionSpec, MaintenanceSpec, ReplicaPolicy)
+
+    ev = EvictionSpec(capacity=6 * size, high_watermark=0.5,
+                      low_watermark=0.2, scan_period_s=5.0)
+    spec = MaintenanceSpec(resync_period_s=1e6, repair_period_s=1e6,
+                           lease_period_s=1e6, reconcile_period_s=1e6)
+    fab = _armed_fabric(f"{root}/home-qp", f"{root}/site-qp",
+                        replica_latencies={"r1": 0.005, "r2": 0.015},
+                        maintenance=spec)
+    s = fab.login("owner", replicas=ReplicaPolicy(
+        sites=("r1", "r2"), write_quorum="majority", eviction=ev))
+    # cold filler traffic the trim may reclaim freely
+    for i in range(3):
+        with s.client.open(f"home/data/cold{i}.bin", "w") as f:
+            f.write(b"C" * size)
+        s.client.pump()
+    net, sched = s.network, s.scheduler
+    # home dies; majority writes park at r1+r2 (the only durable copies)
+    for ep in ("site", "r1", "r2"):
+        net.partition(ep, "home")
+    parked = [f"home/data/parked{i}.bin" for i in range(3)]
+    for p in parked:
+        with s.client.open(p, "w") as f:
+            f.write(b"P" * size)
+        s.client.pump()
+    rep = s.replicas.replicas["r1"]
+    over = rep.resident_bytes > ev.high_bytes
+    sched.run_until(net.clock + ev.scan_period_s + 0.5)
+    sched.quiesce()
+    report = fab.maintenance_report()
+    parked_evicted = sum(1 for p in parked if p not in rep.resident)
+    floor_holds = all(
+        s.replicas.catalog.freshness_floor(p) is not None for p in parked)
+    return (over, parked_evicted, report.evictions, floor_holds)
+
+
+# ---- scenario D: unset => bit-identical; alias == spec ----------------------
+
+def _trace_witness(root: str, size: int):
+    import warnings
+
+    from repro.core import EvictionSpec, ReplicaPolicy
+
+    def drive(fab, policy, tick=False):
+        s = fab.login("bench", replicas=policy)
+        path = "home/data/t.bin"
+        with s.client.open(path, "w") as f:
+            f.write(b"T" * size)
+        s.client.pump()
+        with s.client.open(path) as f:
+            f.read()
+        if tick and s.scheduler is not None:
+            s.scheduler.run_until(s.network.clock + 12.0)
+            s.scheduler.quiesce()
+        return s.network.trace
+
+    # eviction unset: the new accounting / LRU-clock / admission code is
+    # all wire-free, so a maintenance-armed-but-unticked fabric must
+    # still trace bit-identically to no maintenance plane at all (the
+    # PR 6 zero-cost gate, extended through the eviction code paths)
+    unbounded = ReplicaPolicy(sites=("r1",))
+    plain = drive(star_fabric(f"{root}/home-tp", f"{root}/site-tp",
+                              latency_s=HOME_LATENCY,
+                              replica_latencies={"r1": 0.005}), unbounded)
+    armed = drive(_armed_fabric(f"{root}/home-ta", f"{root}/site-ta",
+                                replica_latencies={"r1": 0.005}),
+                  unbounded)
+    unset_same = plain == armed
+    # the deprecated alias must wire bit-identically to the explicit
+    # spec under identical ticking (capacity far above the working set:
+    # the spec is armed but never trims)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        alias_pol = ReplicaPolicy(sites=("r1",),
+                                  capacity_bytes=64 * size)
+    spec_pol = ReplicaPolicy(sites=("r1",),
+                             eviction=EvictionSpec(capacity=64 * size))
+    alias = drive(_armed_fabric(f"{root}/home-al", f"{root}/site-al",
+                                replica_latencies={"r1": 0.005}),
+                  alias_pol, tick=True)
+    explicit = drive(_armed_fabric(f"{root}/home-ex", f"{root}/site-ex",
+                                   replica_latencies={"r1": 0.005}),
+                     spec_pol, tick=True)
+    return unset_same, alias == explicit
+
+
+def run(smoke: bool = False) -> int:
+    from repro.core import KB
+
+    # 40 files keeps capacity (10%) = 4 files >= the 3-file hot set in
+    # both modes; smoke shrinks bytes and reader count, not the shape
+    n_files = 40
+    size = 16 * KB if smoke else 64 * KB
+    readers = 3 if smoke else 6
+    root = tempfile.mkdtemp(prefix="fig_eviction_")
+    failures = []
+    try:
+        # ---- A: capacity census ------------------------------------------
+        us, (capture, peak_frac, evictions, refusals, within) = timed(
+            lambda: _capacity_census(root, n_files, size, readers))
+        emit("eviction/replica_capture_frac", us, f"{capture:.2f}")
+        emit("eviction/peak_resident_frac", 0.0, f"{peak_frac:.2f}")
+        emit("eviction/scheduled_evictions", 0.0, evictions)
+        emit("eviction/admission_refusals", 0.0, refusals)
+        if capture <= 0.5:
+            failures.append(
+                f"10%-capacity replica captured only {capture:.0%} of "
+                "fills (must be the majority)")
+        if peak_frac > 1.0 or not within:
+            failures.append(
+                f"replica resident bytes exceeded capacity "
+                f"(peak {peak_frac:.2f}x)")
+        if evictions <= 0:
+            failures.append("the scheduled evict task never evicted "
+                            "across the phase rotation")
+
+        # ---- B: evict/repair lock contention -----------------------------
+        us, (report, converged) = timed(
+            lambda: _evict_repair_contention(root, size))
+        emit("eviction/lock_conflicts", us, report.lock_conflicts)
+        emit("eviction/double_repairs", 0.0, report.double_repairs)
+        if report.lock_conflicts <= 0:
+            failures.append("evictor's lease never contended with the "
+                            "repair task on the shared LockTable")
+        if report.double_repairs != 0:
+            failures.append(f"{report.double_repairs} double repair(s) "
+                            "with eviction in the mix")
+        if not converged:
+            failures.append("rewritten-after-evict path did not converge "
+                            "once the evictor's lease expired")
+
+        # ---- C: quorum-parked protection ---------------------------------
+        us, (over, parked_evicted, evictions_c, floor_holds) = timed(
+            lambda: _parked_never_evicted(root, size))
+        emit("eviction/parked_evicted", us, parked_evicted)
+        emit("eviction/parked_scan_evictions", 0.0, evictions_c)
+        if not over:
+            failures.append("scenario C never crossed the high watermark "
+                            "(trim pressure missing)")
+        if parked_evicted != 0:
+            failures.append(f"{parked_evicted} quorum-parked path(s) "
+                            "evicted — the only durable copies")
+        if not floor_holds:
+            failures.append("freshness floor lost on a parked path")
+
+        # ---- D: zero-cost + alias equivalence ----------------------------
+        us, (unset_same, alias_same) = timed(
+            lambda: _trace_witness(root, size))
+        emit("eviction/unset_trace_identical", us, int(unset_same))
+        emit("eviction/alias_trace_identical", 0.0, int(alias_same))
+        if not unset_same:
+            failures.append("EvictionSpec unset changed the transport "
+                            "trace (zero-cost guarantee broken)")
+        if not alias_same:
+            failures.append("capacity_bytes alias and explicit "
+                            "EvictionSpec wired different traces")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)   # keep stdout valid CSV
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    rc = run(smoke="--smoke" in sys.argv)
+    if rc == 0:
+        print("eviction: OK (10% replica captures the majority; evict "
+              "and repair share one LockTable with zero double repairs; "
+              "quorum-parked bytes survive any trim; unset => traces "
+              "bit-identical)")
+    raise SystemExit(rc)

@@ -31,7 +31,7 @@ if __name__ == "__main__":
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import emit, timed
+from benchmarks.common import cache_fill_totals, emit, timed
 
 N_USERS = 16                      # census check is O(n^2)
 SMOKE_USERS = 4
@@ -163,10 +163,9 @@ def _shared_mount_census(n_clients: int, n_files: int) -> int:
                 return net.clock - c0
 
             us, wan_s = timed(sweep)
-            home_fills = sum(cl.cache.fills_from.get("proj_home", 0)
-                             for cl in clients)
-            rep_fills = sum(v for cl in clients
-                            for k, v in cl.cache.fills_from.items()
+            fills = cache_fill_totals(clients)
+            home_fills = fills.get("proj_home", 0)
+            rep_fills = sum(v for k, v in fills.items()
                             if k != "proj_home")
             offload = rep_fills / max(home_fills + rep_fills, 1)
             tag = f"replicas={n_replicas}"

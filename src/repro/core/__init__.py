@@ -14,11 +14,12 @@ from repro.core.striping import (  # noqa: F401
     STRIPE_THRESHOLD, MIN_BLOCK, MAX_STRIPES,
 )
 from repro.core.store import HomeStore, ObjectStat  # noqa: F401
-from repro.core.cache import CacheSpace, CacheEntry  # noqa: F401
+from repro.core.cache import CacheSpace, CacheEntry, CacheStats  # noqa: F401
 from repro.core.oplog import MetaOpQueue, OpRecord  # noqa: F401
 from repro.core.callbacks import NotificationManager  # noqa: F401
 from repro.core.replication import (  # noqa: F401
-    PendingApply, Replica, ReplicaCatalog, ReplicaSet, WritePolicy,
+    EvictionSpec, PendingApply, Replica, ReplicaCatalog, ReplicaSet,
+    WritePolicy,
 )
 from repro.core.lease import LeaseManager  # noqa: F401
 from repro.core.tasks import (  # noqa: F401
@@ -35,7 +36,7 @@ from repro.core.fabric import (  # noqa: F401
 __all__ = [
     # declarative topology / session surface (docs/fabric.md)
     "Fabric", "FabricSpec", "SiteSpec", "LinkSpec", "ReplicaPolicy",
-    "MountSpec", "Session", "UserFileServer", "ussh_login",
+    "EvictionSpec", "MountSpec", "Session", "UserFileServer", "ussh_login",
     # transport
     "Network", "Endpoint", "LinkModel", "Transfer", "KeyPhrase",
     "DisconnectedError", "AuthError", "QuorumNotReachedError",
@@ -44,8 +45,8 @@ __all__ = [
     "plan_stripes", "reassemble", "StripePlan", "StripedTransfer",
     "TransferGroup", "STRIPE_THRESHOLD", "MIN_BLOCK", "MAX_STRIPES",
     # stores / cache / WAL
-    "HomeStore", "ObjectStat", "CacheSpace", "CacheEntry", "MetaOpQueue",
-    "OpRecord",
+    "HomeStore", "ObjectStat", "CacheSpace", "CacheEntry", "CacheStats",
+    "MetaOpQueue", "OpRecord",
     # coherency / replication / leases
     "NotificationManager", "PendingApply", "Replica", "ReplicaCatalog",
     "ReplicaSet", "WritePolicy", "LeaseManager",

@@ -40,6 +40,25 @@ class CacheEntry:
                    stat=ObjectStat.from_json(d["stat"]))
 
 
+@dataclass(frozen=True)
+class CacheStats:
+    """Typed counter snapshot — what reporting consumes instead of
+    poking the cache's raw dicts (``benchmarks/common.py``, eviction
+    accounting)."""
+
+    hits: int
+    misses: int
+    invalidations: int
+    fills: int                       # total cache fills, all sources
+    fills_from: Dict[str, int]       # endpoint name -> fills it served
+    bytes_resident: int              # live data bytes in cache space
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
 class CacheSpace:
     """On-disk whole-object cache (sited on the fast local/parallel FS)."""
 
@@ -51,9 +70,18 @@ class CacheSpace:
         self.invalidations = 0
         # endpoint name -> number of cache fills it served (replica routing)
         self.fills_from: Dict[str, int] = {}
+        # live data bytes, tracked incrementally at store/evict time
+        self.bytes_resident = 0
 
     def record_fill(self, source: str) -> None:
         self.fills_from[source] = self.fills_from.get(source, 0) + 1
+
+    def stats(self) -> CacheStats:
+        return CacheStats(hits=self.hits, misses=self.misses,
+                          invalidations=self.invalidations,
+                          fills=sum(self.fills_from.values()),
+                          fills_from=dict(self.fills_from),
+                          bytes_resident=self.bytes_resident)
 
     # ---- paths: data file + hidden attr file alongside -------------------
     def data_path(self, path: str) -> str:
@@ -83,9 +111,11 @@ class CacheSpace:
                    state: str = VALID) -> CacheEntry:
         dp = self.data_path(path)
         os.makedirs(os.path.dirname(dp), exist_ok=True)
+        old = os.path.getsize(dp) if os.path.exists(dp) else 0
         with open(dp + ".tmp", "wb") as f:
             f.write(data)
         os.replace(dp + ".tmp", dp)
+        self.bytes_resident += len(data) - old
         entry = CacheEntry(path=path, state=state, stat=stat)
         self.write_entry(entry)
         return entry
@@ -106,13 +136,21 @@ class CacheSpace:
             n += 1
         return n
 
-    def evict(self, path: str) -> None:
+    def evict(self, path: str) -> int:
         """Drop the cached copy entirely: data file + hidden attr file.
         The next access is a cold fill (unlike ``invalidate``, which
-        keeps the entry and marks it stale)."""
-        for p in (self.data_path(path), self.attr_path(path)):
-            if os.path.exists(p):
-                os.remove(p)
+        keeps the entry and marks it stale).  Returns the data bytes
+        freed, so eviction accounting composes without a re-stat."""
+        freed = 0
+        dp = self.data_path(path)
+        if os.path.exists(dp):
+            freed = os.path.getsize(dp)
+            os.remove(dp)
+            self.bytes_resident -= freed
+        ap = self.attr_path(path)
+        if os.path.exists(ap):
+            os.remove(ap)
+        return freed
 
     def invalidate(self, path: str, new_stat: Optional[ObjectStat] = None):
         entry = self.lookup(path)

@@ -19,7 +19,9 @@ wide-area plumbing.  This module is that declaration:
     links (which is what ``ussh_login`` used to force on every caller).
   * :class:`ReplicaPolicy` / :class:`MountSpec` — per-session policy
     (which declared sites replicate a home space, the W-of-N write-ack
-    rule, queue-aware routing, a forward-looking capacity seam) and the
+    rule, queue-aware routing, an optional :class:`EvictionSpec`
+    capacity bound driving on-demand placement and scheduled
+    eviction) and the
     namespace mounts, separated from the topology they run on — replica
     *policy* apart from transport *mechanism*, per the GridFTP replica
     management line.
@@ -40,11 +42,12 @@ delegates here — bit-identical wiring, one ``DeprecationWarning``.
 from __future__ import annotations
 
 import os
+import warnings
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.namespace import XufsClient
-from repro.core.replication import ReplicaSet, WritePolicy
+from repro.core.replication import EvictionSpec, ReplicaSet, WritePolicy
 from repro.core.session import Session, UserFileServer, _authenticate
 from repro.core.store import HomeStore
 from repro.core.tasks import (
@@ -57,6 +60,23 @@ from repro.core.transport import (
 
 def _pair(a: str, b: str) -> Tuple[str, str]:
     return (min(a, b), max(a, b))
+
+
+_CAPACITY_DEPRECATION_WARNED = False
+
+
+def _warn_capacity_bytes_once() -> None:
+    """One DeprecationWarning per process, the ``ussh_login`` shim
+    pattern: loud enough to migrate, quiet enough for a long session."""
+    global _CAPACITY_DEPRECATION_WARNED
+    if not _CAPACITY_DEPRECATION_WARNED:
+        _CAPACITY_DEPRECATION_WARNED = True
+        warnings.warn(
+            "ReplicaPolicy(capacity_bytes=...) is deprecated; pass "
+            "eviction=EvictionSpec(capacity=...) — the alias assembles "
+            "the default spec (lru, 0.9/0.6 watermarks, 10s scans) and "
+            "will be dropped in a major version; see docs/fabric.md "
+            "migration table", DeprecationWarning, stacklevel=3)
 
 
 @dataclass(frozen=True)
@@ -117,16 +137,24 @@ class ReplicaPolicy:
     ``sites`` names declared fabric sites that hold read replicas;
     ``write_quorum`` is the W-of-N ack rule (explicit W, ``"majority"``,
     or ``"all"`` — see ``docs/consistency.md``); ``queue_aware`` toggles
-    estimated-completion routing.  ``capacity_bytes`` is the
-    forward-looking placement/eviction seam (ROADMAP): today it only
-    validates and is recorded on the :class:`ReplicaSet`; no eviction
-    happens yet.
+    estimated-completion routing.  ``eviction`` is an optional
+    :class:`EvictionSpec` bounding each replica's resident bytes: the
+    set fills on demand (read repair IS placement), resync refreshes
+    only the resident hot set, and — when the fabric's maintenance
+    plane is armed — a scheduled ``evict:`` task trims back under the
+    watermarks (``docs/maintenance.md``).  Unset ⇒ replicas mirror the
+    whole home space, traces bit-identical to the pre-eviction fabric.
+
+    ``capacity_bytes`` survives as a deprecated alias that assembles
+    ``EvictionSpec(capacity=...)`` and warns once per process (the
+    ``ussh_login`` shim pattern).
     """
 
     sites: Tuple[str, ...] = ()
     write_quorum: WritePolicy = 1
     queue_aware: bool = True
     capacity_bytes: Optional[int] = None
+    eviction: Optional[EvictionSpec] = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "sites", tuple(self.sites))
@@ -140,10 +168,22 @@ class ReplicaPolicy:
         elif int(self.write_quorum) < 1:
             raise ValueError(f"write_quorum must be >= 1: "
                              f"{self.write_quorum}")
-        if self.capacity_bytes is not None and self.capacity_bytes <= 0:
-            raise ValueError(
-                f"capacity_bytes must be > 0 (or None = unbounded): "
-                f"{self.capacity_bytes}")
+        if self.capacity_bytes is not None:
+            if self.capacity_bytes <= 0:
+                raise ValueError(
+                    f"capacity_bytes must be > 0 (or None = unbounded): "
+                    f"{self.capacity_bytes}")
+            if self.eviction is not None:
+                if self.eviction.capacity != self.capacity_bytes:
+                    raise ValueError(
+                        f"conflicting capacity_bytes={self.capacity_bytes} "
+                        f"and eviction.capacity={self.eviction.capacity}; "
+                        "drop the deprecated alias")
+            else:
+                _warn_capacity_bytes_once()
+                object.__setattr__(
+                    self, "eviction",
+                    EvictionSpec(capacity=self.capacity_bytes))
 
 
 @dataclass(frozen=True)
@@ -396,6 +436,49 @@ class Fabric:
         sched.register(f"repair:{tag}", repair_tick,
                        period_s=spec.repair_period_s, owner=tag)
 
+        ev = rset.eviction
+        if ev is None:
+            return
+        for rname in rset.replicas:
+            # one evict task per capacity-bounded replica, fabric-wide:
+            # sessions sharing the ReplicaSet (attach) must not scan the
+            # same replica twice per period — first registration wins
+            task_name = f"evict:{key}/{rname}"
+            if task_name in sched.tasks:
+                continue
+
+            # the lease holder is the EVICTOR, not the session: repair
+            # ticks registered under the session tag must contend (and
+            # lose) against a live eviction lease on the same path —
+            # sharing the session tag would let same-owner renewal
+            # silently bypass the eviction/repair mutual exclusion
+            evict_owner = f"evict:{tag}"
+
+            def evict_tick(rname: str = rname) -> int:
+                rep = rset.replicas[rname]
+                if rep.resident_bytes <= ev.high_bytes:
+                    return 0          # under the watermark: wire-free scan
+                # over the high watermark: the scan probes the replica so
+                # a partition fails the task into the retry / backoff /
+                # dead-letter ladder instead of silently skipping the trim
+                net.rpc(site, rname, "evict_scan")
+                evicted = 0
+                for path in rset.eviction_candidates(rname):
+                    if rep.resident_bytes <= ev.low_bytes:
+                        break         # trimmed down to the low watermark
+                    if not sched.locks.acquire(f"{key}/{path}",
+                                               evict_owner,
+                                               now=net.clock):
+                        continue      # repair (or a peer evictor) holds
+                        #               the path lease: never race it
+                    rset.evict_path(rname, path)
+                    sched.evictions += 1
+                    evicted += 1
+                return evicted
+
+            sched.register(task_name, evict_tick,
+                           period_s=ev.scan_period_s, owner=tag)
+
     # ---- sessions --------------------------------------------------------
     def login(self, user: str, *, home: str = "home", site: str = "site",
               mounts: Optional[Sequence[MountSpec]] = None,
@@ -439,7 +522,7 @@ class Fabric:
                               home_store=store, token=token,
                               write_quorum=replicas.write_quorum,
                               queue_aware=replicas.queue_aware,
-                              capacity_bytes=replicas.capacity_bytes)
+                              eviction=replicas.eviction)
             for rname in replicas.sites:
                 if not self.network.has_link(home, rname):
                     # replica sites are near the compute site but WAN-far

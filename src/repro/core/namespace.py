@@ -198,9 +198,14 @@ class XufsClient:
             self.cache.misses += 1
             self.cache.record_fill(server_name)
             if m.replicas is not None:
+                # the serving replica's LRU clock ticks (wire-free) —
+                # feeds capacity-eviction ranking
+                m.replicas.note_read(server_name, path)
                 # read repair: push the bytes we just pulled to any
                 # replica this read observed stale — overlapped, so the
-                # read's own latency is untouched
+                # read's own latency is untouched.  On a capacity-bounded
+                # set this doubles as demand placement: the hot path is
+                # (re-)placed at replicas that never held it.
                 m.replicas.read_repair(self.name, path, data, st.version)
             return self.cache.store_data(path, data, st, state=VALID)
         if last_exc is not None:

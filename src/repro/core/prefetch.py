@@ -70,6 +70,9 @@ class Prefetcher:
             cl.cache.store_data(st.path, data, fresh, state=VALID)
             cl.cache.misses += 1
             cl.cache.record_fill(src)
+            if m.replicas is not None:
+                # a prefetch hit is a read for LRU purposes (wire-free)
+                m.replicas.note_read(src, st.path)
             fetched += 1
         # block until the last fill lands: overlapped elapsed, not the sum
         cl.network.wait_all(transfers)

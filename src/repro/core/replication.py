@@ -58,6 +58,58 @@ ROUTE_PROBE_BYTES = 1024 * 1024
 _NO_PATHS: Set[str] = frozenset()   # type: ignore[assignment]
 
 
+@dataclass(frozen=True)
+class EvictionSpec:
+    """Capacity-aware placement/eviction policy for one home space's
+    replicas (GridFTP replica-management line: placement under finite
+    replica storage is *the* wide-area problem).
+
+    ``capacity`` bounds each replica's resident bytes; the scheduled
+    ``evict:`` task scans every ``scan_period_s`` and, once resident
+    bytes cross ``high_watermark * capacity``, evicts candidates ranked
+    by ``policy`` — ``"lru"`` (coldest last-touch first) or
+    ``"fill_cost"`` (fewest fills served first, LRU tie-break, i.e.
+    least projected refill traffic) — down to
+    ``low_watermark * capacity``.  A capacity-bounded replica also stops
+    mirroring the home space: resync refreshes only what is already
+    resident, and placement happens on demand via read repair
+    (``docs/maintenance.md``).  Unset (``ReplicaPolicy.eviction=None``)
+    keeps replicas unbounded and every trace bit-identical.
+    """
+
+    capacity: int
+    high_watermark: float = 0.9
+    low_watermark: float = 0.6
+    policy: str = "lru"
+    scan_period_s: float = 10.0
+
+    def __post_init__(self) -> None:
+        if self.capacity <= 0:
+            raise ValueError(
+                f"EvictionSpec.capacity must be > 0 bytes: {self.capacity}")
+        if not (0.0 < self.low_watermark <= self.high_watermark <= 1.0):
+            raise ValueError(
+                "watermarks must satisfy 0 < low <= high <= 1: "
+                f"low={self.low_watermark}, high={self.high_watermark}")
+        if self.policy not in ("lru", "fill_cost"):
+            raise ValueError(
+                f"eviction policy must be 'lru' or 'fill_cost': "
+                f"{self.policy!r}")
+        if self.scan_period_s <= 0:
+            raise ValueError(
+                f"scan_period_s must be > 0: {self.scan_period_s}")
+
+    @property
+    def high_bytes(self) -> int:
+        """Resident bytes beyond which a scan starts evicting."""
+        return int(self.high_watermark * self.capacity)
+
+    @property
+    def low_bytes(self) -> int:
+        """The scan's target: evict until resident bytes <= this."""
+        return int(self.low_watermark * self.capacity)
+
+
 class ReplicaCatalog:
     """``path -> {endpoint: version}`` plus the home version per path.
 
@@ -181,12 +233,29 @@ class ReplicaCatalog:
 
 @dataclass
 class Replica:
-    """One per-site read replica: a HomeStore at its own endpoint."""
+    """One per-site read replica: a HomeStore at its own endpoint.
+
+    Byte accounting (``resident``/``resident_bytes``/``peak``) and the
+    touch/fill clocks are maintained for every replica — they are free
+    metadata — but only a capacity-bounded replica (an
+    :class:`EvictionSpec` on the set) acts on them.
+    """
 
     name: str
     store: HomeStore
     token: str
     lagging: Set[str] = field(default_factory=set)   # paths needing repair
+    #: path -> bytes held here (the resident set the eviction scan ranks)
+    resident: Dict[str, int] = field(default_factory=dict)
+    resident_bytes: int = 0
+    #: high-water mark of resident_bytes — the capacity gate's witness
+    peak_resident_bytes: int = 0
+    #: path -> virtual clock of the last fill this replica served or
+    #: received (the LRU clock)
+    last_touch: Dict[str, float] = field(default_factory=dict)
+    #: path -> cache fills this replica served (the fill-cost signal)
+    fills: Dict[str, int] = field(default_factory=dict)
+    evictions: int = 0
 
 
 @dataclass
@@ -211,21 +280,31 @@ class ReplicaSet:
                  home_store: HomeStore, token: str,
                  write_quorum: WritePolicy = 1,
                  queue_aware: bool = True,
-                 capacity_bytes: Optional[int] = None):
-        if capacity_bytes is not None and capacity_bytes <= 0:
-            raise ValueError(
-                f"capacity_bytes must be > 0 (or None = unbounded): "
-                f"{capacity_bytes}")
+                 capacity_bytes: Optional[int] = None,
+                 eviction: Optional[EvictionSpec] = None):
+        if capacity_bytes is not None:
+            # deprecated alias (the PR 5 seam): assembles the structured
+            # spec — ReplicaPolicy warns; this low-level path stays quiet
+            if capacity_bytes <= 0:
+                raise ValueError(
+                    f"capacity_bytes must be > 0 (or None = unbounded): "
+                    f"{capacity_bytes}")
+            if eviction is not None and eviction.capacity != capacity_bytes:
+                raise ValueError(
+                    f"conflicting capacity_bytes={capacity_bytes} and "
+                    f"eviction.capacity={eviction.capacity}; drop the "
+                    "deprecated alias")
+            if eviction is None:
+                eviction = EvictionSpec(capacity=capacity_bytes)
         self.network = network
         self.home_name = home_name
         self.home_store = home_store
         self.token = token
         self.write_quorum = write_quorum
-        #: Per-replica placement budget (bytes).  Recorded from
-        #: ReplicaPolicy.capacity_bytes as the seam for the ROADMAP
-        #: eviction item; no placement/eviction acts on it yet —
-        #: replicas still mirror the whole home space.
-        self.capacity_bytes = capacity_bytes
+        #: Per-replica placement/eviction policy.  None = unbounded:
+        #: replicas mirror the whole home space and no accounting is
+        #: acted on (traces bit-identical to the pre-eviction fabric).
+        self.eviction = eviction
         #: Rank read sources / fan-out targets by estimated completion
         #: (latency + channel queue + NIC backlog).  False restores the
         #: static nearest-by-latency ranking — on an idle network the
@@ -238,6 +317,10 @@ class ReplicaSet:
         self.fanout_ok = 0
         self.fanout_deferred = 0
         self.read_repairs = 0
+        #: applies refused because they would overflow a bounded replica
+        self.admission_refused = 0
+        #: evictions across every replica (per-replica count on Replica)
+        self.evictions = 0
         # memoized per-(client, path) fresh-source candidates, valid for
         # one catalog generation; the O(1) lagging membership check and
         # the ranking by current queue state stay per-call (they are
@@ -249,6 +332,96 @@ class ReplicaSet:
         self.route_hits = 0
         self.route_misses = 0
         home_store.subscribe(self._on_home_change)
+
+    @property
+    def capacity_bytes(self) -> Optional[int]:
+        """Deprecated alias for ``eviction.capacity``; None = unbounded."""
+        return self.eviction.capacity if self.eviction is not None else None
+
+    # ---- capacity accounting --------------------------------------------
+    # Accounting is unconditional (wire-free dict updates: unbounded-set
+    # traces stay bit-identical); only *behavior* — admission, hot-set
+    # resync, demand placement, the evict task — gates on ``eviction``.
+    def _account_put(self, name: str, path: str, nbytes: int) -> None:
+        rep = self.replicas[name]
+        old = rep.resident.get(path, 0)
+        rep.resident[path] = nbytes
+        rep.resident_bytes += nbytes - old
+        if rep.resident_bytes > rep.peak_resident_bytes:
+            rep.peak_resident_bytes = rep.resident_bytes
+        rep.last_touch[path] = self.network.clock
+        rep.fills[path] = rep.fills.get(path, 0) + 1
+
+    def _account_drop(self, name: str, path: str) -> int:
+        rep = self.replicas[name]
+        freed = rep.resident.pop(path, 0)
+        rep.resident_bytes -= freed
+        rep.last_touch.pop(path, None)
+        rep.fills.pop(path, None)
+        return freed
+
+    def note_read(self, name: str, path: str) -> None:
+        """Touch a path's LRU clock: the client read (or prefetch) was
+        served from this replica.  Wire-free; feeds eviction ranking."""
+        rep = self.replicas.get(name)
+        if rep is not None and path in rep.resident:
+            rep.last_touch[path] = self.network.clock
+
+    def admits(self, name: str, path: str, nbytes: int) -> bool:
+        """Would landing ``nbytes`` for ``path`` keep the replica within
+        its capacity?  Unbounded sets admit everything."""
+        if self.eviction is None:
+            return True
+        rep = self.replicas[name]
+        old = rep.resident.get(path, 0)
+        return rep.resident_bytes - old + nbytes <= self.eviction.capacity
+
+    # ---- eviction (policy decisions; the fabric schedules them) ----------
+    def eviction_protected(self, name: str, path: str) -> bool:
+        """Paths eviction must never touch: a quorum-parked write whose
+        replica copies are the only durable ones, and a path whose held
+        version IS the freshness floor (newer than — or absent from —
+        home, so evicting would lose the newest bytes)."""
+        if path in self.catalog.quorum_versions:
+            return True
+        held = self.catalog.version_at(path, name)
+        if held is None:
+            # physically resident but catalog-dropped (deferred fan-out):
+            # repair owns this path, eviction stays away
+            return True
+        hv = self.catalog.home_version(path)
+        return hv is None or held > hv
+
+    def eviction_candidates(self, name: str) -> List[str]:
+        """Resident, unprotected paths cheapest-to-evict first under the
+        spec's policy: ``"lru"`` = coldest last-touch; ``"fill_cost"`` =
+        fewest re-fills (cheap to re-place on demand), LRU tiebreak.
+        Path-name tiebreak keeps the order deterministic."""
+        rep = self.replicas[name]
+        paths = [p for p in rep.resident
+                 if not self.eviction_protected(name, p)]
+        if self.eviction is not None and self.eviction.policy == "fill_cost":
+            paths.sort(key=lambda p: (rep.fills.get(p, 0),
+                                      rep.last_touch.get(p, 0.0), p))
+        else:
+            paths.sort(key=lambda p: (rep.last_touch.get(p, 0.0), p))
+        return paths
+
+    def evict_path(self, name: str, path: str) -> int:
+        """Drop one replica copy and return the bytes freed.  The path is
+        NOT marked lagging: re-placement is read repair on the next hot
+        access, not a scheduled repair obligation."""
+        rep = self.replicas[name]
+        try:
+            rep.store.delete(rep.token, path)
+        except FileNotFoundError:
+            pass
+        self.catalog.drop(path, name)
+        rep.lagging.discard(path)
+        freed = self._account_drop(name, path)
+        rep.evictions += 1
+        self.evictions += 1
+        return freed
 
     # ---- write-ack policy ------------------------------------------------
     @property
@@ -444,6 +617,15 @@ class ReplicaSet:
         ``network.wait`` when the caller needs the ack on the clock.
         """
         rep = self.replicas[name]
+        if not self.admits(name, path, len(data)):
+            # bounded replica full: refuse, don't reserve wire.  The old
+            # resident version (if any) stays valid — no catalog drop —
+            # and the path must NOT stay lagging or the scheduled repair
+            # would spin on a refusal forever; the evict task frees room
+            # and the next hot read re-places via read repair.
+            rep.lagging.discard(path)
+            self.admission_refused += 1
+            return None
         src = src or self.home_name
         try:
             group = self.transfer.begin(src, name, data)
@@ -465,6 +647,7 @@ class ReplicaSet:
         rep.store.put(rep.token, p.path, p.data, version=p.version)
         self.catalog.record(p.path, p.name, p.version)
         rep.lagging.discard(p.path)
+        self._account_put(p.name, p.path, len(p.data))
         self.fanout_ok += 1
 
     def apply_to_replica(self, name: str, path: str, data: bytes,
@@ -501,8 +684,12 @@ class ReplicaSet:
             held = self.catalog.version_at(path, name)
             if held is not None and held >= version:
                 continue
-            if held is None and path not in rep.lagging:
+            if held is None and path not in rep.lagging \
+                    and self.eviction is None:
                 continue          # never placed here: placement, not repair
+            # on a capacity-bounded replica the read reaching this point
+            # IS the placement signal: the path is hot, so read repair
+            # doubles as demand placement (admission still gates it)
             p = self.begin_apply(name, path, data, version, src=client_name)
             if p is None:
                 continue          # still partitioned: stays lagging
@@ -527,6 +714,7 @@ class ReplicaSet:
                 pass
             self.catalog.drop(path, rep.name)
             rep.lagging.discard(path)
+            self._account_drop(rep.name, path)
             ok += 1
         return ok
 
@@ -555,6 +743,14 @@ class ReplicaSet:
             blob = None       # home disk read shared across replicas
             target = hv
             for rep in self.replicas.values():
+                if self.eviction is not None \
+                        and path not in rep.resident \
+                        and path not in rep.lagging:
+                    # hot-set-only fill: a capacity-bounded replica never
+                    # mirrors at resync — bytes arrive on demand (read
+                    # repair) and anti-entropy only refreshes what is
+                    # already resident or owed (lagging)
+                    continue
                 held = self.catalog.version_at(path, rep.name)
                 if held is not None and held >= target:
                     rep.lagging.discard(path)
@@ -605,6 +801,7 @@ class ReplicaSet:
                 # repaired — leaving it in ``lagging`` kept a dead path on
                 # the read-repair candidate list forever
                 rep.lagging.discard(path)
+                self._account_drop(rep.name, path)
                 repaired += 1
         return repaired
 

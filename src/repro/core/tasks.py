@@ -36,7 +36,8 @@ movement instead of a side effect of foreground I/O.
     extends.  Conflicts are counted, not blocked on.
 
 Counters (``tasks_run``, ``retries``, ``dead_lettered``,
-``lock_conflicts``, ``repairs``, ``double_repairs``) plus per-task stats
+``lock_conflicts``, ``repairs``, ``double_repairs``, ``evictions``)
+plus per-task stats
 snapshot into a :class:`MaintenanceReport` — what
 ``benchmarks/fig_maintenance.py`` gates on.  See ``docs/maintenance.md``.
 """
@@ -196,6 +197,7 @@ class MaintenanceReport:
     lock_conflicts: int
     repairs: int
     double_repairs: int
+    evictions: int
     inflight: int
     #: task name -> {owner, runs, failures, attempt, next_due, dead}
     tasks: Dict[str, Dict[str, object]]
@@ -229,6 +231,7 @@ class MaintenanceScheduler:
         self.dead_lettered = 0
         self.repairs = 0
         self.double_repairs = 0
+        self.evictions = 0
         # repairs launched but not yet acked: (replica set, pending apply)
         self._inflight: List[Tuple["ReplicaSet", "PendingApply"]] = []
         self._tick_seq = 0
@@ -426,6 +429,7 @@ class MaintenanceScheduler:
             lock_conflicts=self.locks.conflicts,
             repairs=self.repairs,
             double_repairs=self.double_repairs,
+            evictions=self.evictions,
             inflight=len(self._inflight),
             tasks={t.name: {
                 "owner": t.owner, "runs": t.runs,

@@ -1,0 +1,223 @@
+"""Capacity-aware replica placement & eviction.
+
+The tentpole invariants: per-replica byte accounting is exact; a bounded
+replica admits on demand instead of mirroring at resync; the scheduled
+``evict:`` task trims to the low watermark under per-path locks; and the
+three protection classes — quorum-parked, freshness-floor, repair-lease
+held — are never evicted (property test).  Read repair is the
+re-placement path for an evicted-then-hot-again file (regression test).
+"""
+import dataclasses
+import itertools
+
+import pytest
+
+from _propcheck import given, settings, strategies as st
+from repro.core import (
+    EvictionSpec, Fabric, FabricSpec, KB, LinkModel, MB, MaintenanceSpec,
+    ReplicaPolicy,
+)
+
+HOME_LATENCY = 0.060
+
+#: long-period everything: isolates the evict task on the scheduler
+QUIET = MaintenanceSpec(resync_period_s=1e6, repair_period_s=1e6,
+                        lease_period_s=1e6, reconcile_period_s=1e6,
+                        lock_lease_s=120.0)
+
+
+def efab(tmp_path, tag="e", maintenance=None):
+    spec = FabricSpec.star(str(tmp_path / f"home-{tag}"),
+                           str(tmp_path / f"site-{tag}"),
+                           replica_latencies={"r1": 0.005},
+                           link=LinkModel(latency_s=HOME_LATENCY))
+    if maintenance is not None:
+        spec = dataclasses.replace(spec, maintenance=maintenance)
+    return Fabric(spec)
+
+
+def elogin(tmp_path, ev, tag="e", maintenance=None):
+    fab = efab(tmp_path, tag=tag, maintenance=maintenance)
+    return fab.login("sci", replicas=ReplicaPolicy(sites=("r1",),
+                                                   eviction=ev))
+
+
+def put(s, path, payload):
+    with s.client.open(path, "w") as f:
+        f.write(payload)
+    s.client.pump()
+
+
+# ---- spec validation --------------------------------------------------------
+
+@pytest.mark.parametrize("kw", [
+    dict(capacity=0),
+    dict(capacity=-1),
+    dict(capacity=1, high_watermark=1.5),
+    dict(capacity=1, low_watermark=0.0),
+    dict(capacity=1, high_watermark=0.5, low_watermark=0.6),
+    dict(capacity=1, policy="random"),
+    dict(capacity=1, scan_period_s=0.0),
+])
+def test_eviction_spec_validation(kw):
+    with pytest.raises(ValueError):
+        EvictionSpec(**kw)
+
+
+def test_watermark_byte_thresholds():
+    ev = EvictionSpec(capacity=1000, high_watermark=0.9, low_watermark=0.5)
+    assert ev.high_bytes == 900 and ev.low_bytes == 500
+
+
+# ---- byte accounting --------------------------------------------------------
+
+def test_accounting_tracks_resident_bytes_even_unbounded(tmp_path):
+    s = efab(tmp_path, tag="acct").login(
+        "sci", replicas=ReplicaPolicy(sites=("r1",)))
+    put(s, "home/d/a.bin", b"A" * (1 * MB))
+    rep = s.replicas.replicas["r1"]
+    assert rep.resident == {"home/d/a.bin": 1 * MB}
+    assert rep.resident_bytes == 1 * MB
+    # overwrite replaces, never double-counts
+    put(s, "home/d/a.bin", b"B" * (2 * MB))
+    assert rep.resident_bytes == 2 * MB
+    assert rep.peak_resident_bytes == 2 * MB
+    assert rep.fills["home/d/a.bin"] == 2
+    # a propagated delete releases the bytes
+    s.client.unlink("home/d/a.bin")
+    s.client.pump()
+    assert rep.resident == {} and rep.resident_bytes == 0
+    assert rep.peak_resident_bytes == 2 * MB      # high-water survives
+
+
+def test_admission_refuses_when_full_without_marking_lagging(tmp_path):
+    s = elogin(tmp_path, EvictionSpec(capacity=1 * MB), tag="adm")
+    put(s, "home/d/big.bin", b"A" * (2 * MB))     # home acks; replica full
+    rset, rep = s.replicas, s.replicas.replicas["r1"]
+    assert rset.admission_refused == 1
+    assert "home/d/big.bin" not in rep.resident
+    # crucially NOT lagging: a scheduled repair must not spin on refusal
+    assert "home/d/big.bin" not in rep.lagging
+    assert rset.repair_targets() == []
+
+
+# ---- hot-set-only fill / demand placement -----------------------------------
+
+def test_evicted_path_refills_via_read_repair_not_resync(tmp_path):
+    s = elogin(tmp_path, EvictionSpec(capacity=4 * MB), tag="hot")
+    path, payload = "home/d/x.bin", b"X" * (1 * MB)
+    put(s, path, payload)
+    rset, rep = s.replicas, s.replicas.replicas["r1"]
+    assert path in rep.resident
+    assert rset.evict_path("r1", path) == 1 * MB
+    assert rep.resident_bytes == 0 and rep.evictions == 1
+    # anti-entropy must NOT re-mirror the cold evicted path...
+    assert rset.resync() == 0
+    assert path not in rep.resident
+    # ...the next hot read re-places it: read repair IS placement
+    s.client.cache.evict(path)                    # force a cold fill
+    with s.client.open(path) as f:
+        assert f.read() == payload
+    assert path in rep.resident
+    assert rset.read_repairs >= 1
+
+
+def test_unbounded_set_still_mirrors_at_resync(tmp_path):
+    s = efab(tmp_path, tag="mir").login(
+        "sci", replicas=ReplicaPolicy(sites=("r1",)))
+    # seed home directly: the replica never saw a fan-out
+    s.server.store.put(s.token, "home/d/cold.bin", b"C" * (64 * KB))
+    assert s.replicas.resync() == 1               # mirrored (no capacity)
+    assert "home/d/cold.bin" in s.replicas.replicas["r1"].resident
+
+
+# ---- the scheduled evict task -----------------------------------------------
+
+def test_scheduled_evict_trims_lru_to_low_watermark(tmp_path):
+    ev = EvictionSpec(capacity=640 * KB, high_watermark=0.9,
+                      low_watermark=0.5, scan_period_s=10.0)
+    s = elogin(tmp_path, ev, tag="trim", maintenance=QUIET)
+    for i in range(10):
+        put(s, f"home/d/f{i}.bin", bytes([65 + i]) * (64 * KB))
+    rep = s.replicas.replicas["r1"]
+    assert rep.resident_bytes == 640 * KB         # at capacity, over high
+    # touch f0/f1 so they are the hottest; f2.. are the LRU victims
+    for i in (0, 1):
+        s.client.cache.evict(f"home/d/f{i}.bin")
+        with s.client.open(f"home/d/f{i}.bin") as f:
+            f.read()
+    s.scheduler.run_until(s.network.clock + ev.scan_period_s + 0.5)
+    assert rep.resident_bytes <= ev.low_bytes
+    assert rep.evictions == 5                     # 640K -> 320K @ 64K each
+    assert {"home/d/f0.bin", "home/d/f1.bin"} <= set(rep.resident)
+    r = s.maintenance_report()
+    assert r.evictions == 5 and r.double_repairs == 0
+    assert any(name.startswith("evict:") for name in r.tasks)
+
+
+def test_evict_task_dead_letters_under_partition_and_revives(tmp_path):
+    ev = EvictionSpec(capacity=128 * KB, high_watermark=0.5,
+                      low_watermark=0.25, scan_period_s=10.0)
+    s = elogin(tmp_path, ev, tag="dl", maintenance=QUIET)
+    put(s, "home/d/a.bin", b"A" * (128 * KB))     # fills to capacity
+    rep = s.replicas.replicas["r1"]
+    assert rep.resident_bytes > ev.high_bytes
+    net = s.network
+    net.partition("site", "r1")                   # scan probe now fails
+    t0 = net.clock
+    s.scheduler.run_until(t0 + 40.0)
+    r = s.maintenance_report()
+    assert r.dead_lettered == 1
+    (task_name,) = [d.task for d in r.dead_letters]
+    assert task_name.startswith("evict:")
+    assert rep.resident_bytes > ev.high_bytes     # nothing silently evicted
+    net.heal("site", "r1")
+    s.scheduler.revive(task_name)
+    s.scheduler.run_until(net.clock + ev.scan_period_s + 0.5)
+    assert rep.resident_bytes <= ev.low_bytes     # trim landed post-heal
+
+
+# ---- protections (property test) --------------------------------------------
+
+_SEQ = itertools.count()
+
+
+@given(st.lists(st.sampled_from(["plain", "parked", "floor", "locked"]),
+                min_size=1, max_size=10))
+@settings(max_examples=25, deadline=None)
+def test_eviction_never_removes_protected_paths(tmp_path, kinds):
+    """Whatever the mix, a full-trim scan only ever removes plain paths:
+    quorum-parked (replica copies are the only durable bytes),
+    freshness-floor (replica holds newer than home), and repair-lease
+    held paths all survive."""
+    ev = EvictionSpec(capacity=len(kinds) * 16 * KB,
+                      high_watermark=0.5, low_watermark=0.01,
+                      scan_period_s=5.0)
+    s = elogin(tmp_path, ev, tag=f"prop{next(_SEQ)}", maintenance=QUIET)
+    rset, sched, net = s.replicas, s.scheduler, s.network
+    rep = rset.replicas["r1"]
+    key = sched.rset_key(rset)
+    paths = []
+    for i, kind in enumerate(kinds):
+        p = f"home/d/{kind}{i}.bin"
+        put(s, p, b"x" * (16 * KB))
+        paths.append((p, kind))
+    assert rep.resident_bytes == ev.capacity      # all admitted, over high
+    for p, kind in paths:
+        hv = rset.catalog.home_version(p)
+        if kind == "parked":
+            rset.catalog.note_quorum(p, hv + 1)
+        elif kind == "floor":
+            rset.catalog.record(p, "r1", hv + 1)  # replica newer than home
+        elif kind == "locked":
+            assert sched.locks.acquire(f"{key}/{p}", "peer@elsewhere",
+                                       now=net.clock)
+    sched.run_until(net.clock + ev.scan_period_s + 0.5)
+    survivors = set(rep.resident)
+    for p, kind in paths:
+        if kind == "plain":
+            assert p not in survivors, "full trim leaves no plain path"
+        else:
+            assert p in survivors, f"{kind} path was evicted"
+    assert s.maintenance_report().evictions == \
+        sum(1 for _, k in paths if k == "plain")

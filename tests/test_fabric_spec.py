@@ -12,8 +12,8 @@ import warnings
 import pytest
 
 from repro.core import (
-    Fabric, FabricSpec, LinkModel, LinkSpec, MB, MountSpec, Network,
-    ReplicaPolicy, ReplicaSet, SiteSpec, ussh_login,
+    EvictionSpec, Fabric, FabricSpec, LinkModel, LinkSpec, MB, MountSpec,
+    Network, ReplicaPolicy, ReplicaSet, SiteSpec, ussh_login,
 )
 from repro.core import session as session_mod
 
@@ -127,13 +127,37 @@ def test_login_requires_a_root(tmp_path):
 
 
 def test_capacity_bytes_records_on_replica_set(tmp_path):
+    # the deprecated alias assembles a default EvictionSpec and still
+    # surfaces through the capacity_bytes property on the ReplicaSet
     fab = Fabric(star_spec(tmp_path, "cap", replicas=("r1",)))
     s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",),
                                                 capacity_bytes=64 * MB))
     assert s.replicas.capacity_bytes == 64 * MB
+    assert s.replicas.eviction == EvictionSpec(capacity=64 * MB)
     with pytest.raises(ValueError, match="capacity_bytes"):
         ReplicaSet(s.network, "home", s.server.store, s.token,
                    capacity_bytes=0)
+
+
+def test_capacity_bytes_alias_warns_and_matches_spec():
+    import repro.core.fabric as fabric_mod
+    fabric_mod._CAPACITY_DEPRECATION_WARNED = False
+    with pytest.warns(DeprecationWarning, match="capacity_bytes"):
+        p = ReplicaPolicy(sites=("r1",), capacity_bytes=8 * MB)
+    assert p.eviction == EvictionSpec(capacity=8 * MB)
+    # warn-once: a second construction stays quiet
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        ReplicaPolicy(sites=("r1",), capacity_bytes=8 * MB)
+    # alias + explicit spec must agree
+    with pytest.raises(ValueError, match="conflicting"):
+        ReplicaPolicy(sites=("r1",), capacity_bytes=8 * MB,
+                      eviction=EvictionSpec(capacity=9 * MB))
+    # agreeing alias is tolerated without reassembly
+    p2 = ReplicaPolicy(sites=("r1",), capacity_bytes=8 * MB,
+                       eviction=EvictionSpec(capacity=8 * MB,
+                                             policy="fill_cost"))
+    assert p2.eviction.policy == "fill_cost"
 
 
 def test_later_login_never_retimes_a_composed_link(tmp_path):

@@ -13,7 +13,7 @@ import repro.core as core
 #: exported, importable, and non-None.
 SPEC_SURFACE = {
     "Fabric", "FabricSpec", "SiteSpec", "LinkSpec", "ReplicaPolicy",
-    "MountSpec", "Session", "UserFileServer", "ussh_login",
+    "EvictionSpec", "MountSpec", "Session", "UserFileServer", "ussh_login",
 }
 
 #: The long-standing core surface the spec layer composes with.
@@ -21,7 +21,7 @@ CORE_SURFACE = {
     "Network", "Endpoint", "LinkModel", "Transfer", "KeyPhrase",
     "DisconnectedError", "AuthError", "QuorumNotReachedError",
     "KB", "MB", "GB",
-    "HomeStore", "ObjectStat", "CacheSpace", "CacheEntry",
+    "HomeStore", "ObjectStat", "CacheSpace", "CacheEntry", "CacheStats",
     "MetaOpQueue", "OpRecord", "NotificationManager",
     "PendingApply", "Replica", "ReplicaCatalog", "ReplicaSet",
     "WritePolicy", "LeaseManager", "XufsClient", "XufsFile", "Mount",
@@ -56,7 +56,13 @@ def test_spec_layer_signatures_are_stable():
         assert params[kw].kind is inspect.Parameter.KEYWORD_ONLY
     policy_fields = set(core.ReplicaPolicy.__dataclass_fields__)
     assert {"sites", "write_quorum", "queue_aware",
-            "capacity_bytes"} <= policy_fields
+            "capacity_bytes", "eviction"} <= policy_fields
+    ev_fields = set(core.EvictionSpec.__dataclass_fields__)
+    assert {"capacity", "high_watermark", "low_watermark", "policy",
+            "scan_period_s"} <= ev_fields
+    stats_fields = set(core.CacheStats.__dataclass_fields__)
+    assert {"hits", "misses", "fills", "fills_from",
+            "bytes_resident"} <= stats_fields
     site_fields = set(core.SiteSpec.__dataclass_fields__)
     assert {"name", "root", "nic_budget"} <= site_fields
     link_fields = set(core.LinkSpec.__dataclass_fields__)
@@ -68,6 +74,9 @@ def test_spec_layer_signatures_are_stable():
     m_fields = set(core.MaintenanceSpec.__dataclass_fields__)
     assert {"resync_period_s", "repair_period_s", "lease_period_s",
             "reconcile_period_s", "retry", "lock_lease_s"} <= m_fields
+    r_fields = set(core.MaintenanceReport.__dataclass_fields__)
+    assert {"tasks_run", "retries", "dead_lettered", "lock_conflicts",
+            "repairs", "double_repairs", "evictions"} <= r_fields
 
 
 def test_deprecated_shim_still_exported():
