@@ -7,12 +7,15 @@ MB/s, etc.).
 """
 from __future__ import annotations
 
+import json
 import os
 import sys
 import time
 from typing import Callable, Dict, Optional, Tuple
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
 
 
 def star_fabric(home_root: str, site_root: str, *, home: str = "home",
@@ -46,6 +49,35 @@ def timed(fn: Callable[[], float]) -> Tuple[float, float]:
 
 def emit(name: str, us: float, derived) -> None:
     print(f"{name},{us:.1f},{derived}")
+
+
+def percentiles(values, qs=(50, 99)) -> Dict[str, float]:
+    """``{"p50": ..., "p99": ...}`` over a sequence of floats (numpy
+    linear interpolation); empty input yields zeros so reporting code
+    never branches."""
+    import numpy as np
+
+    arr = np.asarray(values, dtype=float)
+    if arr.size == 0:
+        return {f"p{q}": 0.0 for q in qs}
+    return {f"p{q}": float(np.percentile(arr, q)) for q in qs}
+
+
+def write_bench_json(path: str, payload: dict) -> None:
+    """Machine-readable benchmark record (sorted keys, trailing newline
+    — byte-stable for identical payloads, diffable in CI artifacts)."""
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+
+def read_bench_json(path: str) -> Optional[dict]:
+    """Committed baseline loader; ``None`` when absent so first runs on
+    a fresh checkout report instead of failing."""
+    if not os.path.exists(path):
+        return None
+    with open(path) as f:
+        return json.load(f)
 
 
 def cache_fill_totals(clients) -> Dict[str, int]:

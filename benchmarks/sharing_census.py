@@ -31,7 +31,10 @@ if __name__ == "__main__":
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
     sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from benchmarks.common import cache_fill_totals, emit, timed
+from benchmarks.common import (
+    REPO_ROOT, cache_fill_totals, emit, percentiles, read_bench_json,
+    timed, write_bench_json,
+)
 
 N_USERS = 16                      # census check is O(n^2)
 SMOKE_USERS = 4
@@ -39,6 +42,17 @@ N_CLIENTS = 8                     # shared-mount readers
 SMOKE_CLIENTS = 3
 N_SHARED_FILES = 12
 SMOKE_SHARED_FILES = 4
+
+# ---- scale census (batched discrete-event engine) ----------------------
+SCALE_SERVERS = 8                 # census fan-in targets
+SCALE_WAVES = 8                   # rounds of (estimate-all, transfer-all)
+SCALE_CHANNELS = 2                # small pool => queue feedback steers
+SCALE_USERS = 2000                # run.py full; run.py --smoke uses fewer
+SCALE_SMOKE_USERS = 300
+RATIO_USERS = 1000                # the speedup ratio is pinned at 1k
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "census_baseline.json")
+BENCH_JSON_PATH = os.path.join(REPO_ROOT, "BENCH_census.json")
 
 
 def _private_census(n_users: int) -> int:
@@ -191,18 +205,245 @@ def _shared_mount_census(n_clients: int, n_files: int) -> int:
     return failures
 
 
+def _scale_net(trace_limit: int):
+    from repro.core import LinkModel, Network
+
+    return Network(link=LinkModel(latency_s=0.020),
+                   channels_per_pair=SCALE_CHANNELS,
+                   trace_limit=trace_limit)
+
+
+def _census_nbytes(u: int, w: int) -> int:
+    # deterministic per-(user, wave) sizes — no RNG, no seeds to drift
+    return 8192 + (u * 37 + w * 101) % 57344
+
+
+def _run_scale_census(net, n_users: int, waves: int, engine: str):
+    """One census run against ``net``: ``waves`` rounds where every user
+    first prices all candidate servers, then every chosen transfer is
+    issued — estimates strictly before transfers within a round (the
+    same-epoch rule), no clock advance between rounds (channel-queue
+    feedback steers later rounds), one drain at the end.
+
+    ``engine`` is ``"batched"`` (``estimate_batch`` + one
+    ``transfer_batch`` per round) or ``"legacy"`` (the same algorithm
+    through the scalar ``estimated_completion``/``transfer`` calls).
+    Both engines make identical routing decisions, so their traces are
+    bit-identical — that equivalence is the correctness witness.
+
+    Returns ``(n_transfers, completions)`` — completion times since the
+    epoch (clock 0), i.e. queue + wire latency per census transfer.
+    """
+    import numpy as np
+
+    S = SCALE_SERVERS
+    servers = [f"srv{k}" for k in range(S)]
+    unames = [f"u{u}" for u in range(n_users)]
+    net.prealloc(servers)
+    # each user prices servers in its own rotation so equal estimates
+    # (first round, idle fabric) spread the herd instead of piling on
+    # srv0 — both engines scan the same per-user order
+    rot = [[servers[(u + k) % S] for k in range(S)]
+           for u in range(n_users)]
+    n_transfers = 0
+    comps = []
+
+    if engine == "batched":
+        from itertools import repeat
+
+        cand_srcs = [rot[u][k] for u in range(n_users) for k in range(S)]
+        cand_dsts = [unames[u] for u in range(n_users) for _ in range(S)]
+        pair_ids = net.intern_pairs(cand_srcs, cand_dsts)
+        pid_mat = pair_ids.reshape(n_users, S)
+        row_idx = np.arange(n_users)
+        u_arr = np.arange(n_users, dtype=np.int64)
+        srv_arr = np.array(servers)
+        for w in range(waves):
+            nb = 8192 + (u_arr * 37 + w * 101) % 57344
+            est = net.estimate_batch(
+                cand_srcs, cand_dsts, np.repeat(nb, S),
+                pair_ids=pair_ids).reshape(n_users, S)
+            pick_arr = est.argmin(axis=1)
+            # chosen server u = rot[u][pick[u]] = servers[(u + pick) % S]
+            chosen = srv_arr[(u_arr + pick_arr) % S].tolist()
+            batch = net.transfer_batch(
+                list(zip(chosen, unames, repeat("census"), nb.tolist())),
+                pair_ids=pid_mat[row_idx, pick_arr])
+            comps.append(batch.completions)
+            n_transfers += len(batch)
+        net.drain()
+        return n_transfers, np.concatenate(comps) if comps else np.zeros(0)
+
+    for w in range(waves):
+        choices = []
+        for u in range(n_users):
+            nb = _census_nbytes(u, w)
+            best_s, best_e = None, None
+            for s in rot[u]:
+                e = net.estimated_completion(s, unames[u], nb)
+                if best_e is None or e < best_e:
+                    best_s, best_e = s, e
+            choices.append(best_s)
+        for u in range(n_users):
+            t = net.transfer(choices[u], unames[u], "census",
+                             _census_nbytes(u, w))
+            comps.append(t.completion)
+            n_transfers += 1
+    net.drain()
+    return n_transfers, np.asarray(comps)
+
+
+def _scale_witness(n_users: int = 96, waves: int = 3) -> int:
+    """Run BOTH engines on fresh networks and require bit-identical
+    traces, clocks, and accounting — the batched engine must be an
+    optimization, never a model change."""
+    import numpy as np
+
+    net_l = _scale_net(trace_limit=n_users * waves + 8)
+    net_b = _scale_net(trace_limit=n_users * waves + 8)
+    n_l, c_l = _run_scale_census(net_l, n_users, waves, "legacy")
+    n_b, c_b = _run_scale_census(net_b, n_users, waves, "batched")
+    ok = (n_l == n_b
+          and net_l.trace == net_b.trace
+          and net_l.clock == net_b.clock
+          and net_l.bytes_sent == net_b.bytes_sent
+          and dict(net_l.per_endpoint_bytes) == dict(net_b.per_endpoint_bytes)
+          and dict(net_l.per_pair_rpcs) == dict(net_b.per_pair_rpcs)
+          and np.array_equal(np.asarray(c_l), np.asarray(c_b)))
+    emit("sharing/scale_trace_identical", 0.0, 1 if ok else 0)
+    if not ok:
+        print("FAIL: batched census trace diverged from the scalar "
+              "engine", file=sys.stderr)
+        return 1
+    return 0
+
+
+def _scale_speedup():
+    """events/sec of both engines at the pinned 1k-user config on THIS
+    machine; the ratio is the machine-normalized regression metric (so
+    the committed baseline transfers across CI hardware).  The config
+    — users, servers, waves — is pinned regardless of smoke trims so
+    ratios stay comparable."""
+    wall_l, (n_l, _c) = timed(
+        lambda: _run_scale_census(_scale_net(0), RATIO_USERS, SCALE_WAVES,
+                                  "legacy"))
+    wall_b, (n_b, _c) = timed(
+        lambda: _run_scale_census(_scale_net(0), RATIO_USERS, SCALE_WAVES,
+                                  "batched"))
+    eps_l = 2 * n_l / (wall_l / 1e6)
+    eps_b = 2 * n_b / (wall_b / 1e6)
+    return eps_l, eps_b, eps_b / eps_l
+
+
+def _scale_census(n_users: int, *, smoke_scale: bool = False,
+                  write_json: bool = True) -> int:
+    """The 100k-user census gate: correctness witness, speedup ratio at
+    1k, then the full batched run with wall-clock, events/sec, and
+    latency percentiles.  Events are reservation + settlement per
+    transfer (2 per).  ``--smoke-scale`` trims waves and skips the hard
+    10x gate (CI timer noise) but keeps the baseline regression gate,
+    which compares the machine-normalized speedup ratio."""
+    failures = 0
+    waves = 3 if smoke_scale else SCALE_WAVES
+
+    failures += _scale_witness()
+    eps_l, eps_b, speedup = _scale_speedup()
+    emit("sharing/scale_1k_legacy_events_per_s", 0.0, f"{eps_l:.0f}")
+    emit("sharing/scale_1k_batched_events_per_s", 0.0, f"{eps_b:.0f}")
+    emit("sharing/scale_speedup_1k", 0.0, f"{speedup:.1f}")
+
+    net = _scale_net(trace_limit=1000)
+    wall_us, (n_transfers, comps) = timed(
+        lambda: _run_scale_census(net, n_users, waves, "batched"))
+    wall_s = wall_us / 1e6
+    events = 2 * n_transfers
+    eps = events / wall_s
+    pct = percentiles(comps, qs=(50, 99))
+    emit("sharing/scale_users", 0.0, n_users)
+    emit("sharing/scale_wall_s", wall_us, f"{wall_s:.3f}")
+    emit("sharing/scale_events_per_s", 0.0, f"{eps:.0f}")
+    emit("sharing/scale_lat_p50_s", 0.0, f"{pct['p50']:.4f}")
+    emit("sharing/scale_lat_p99_s", 0.0, f"{pct['p99']:.4f}")
+
+    if write_json:
+        write_bench_json(BENCH_JSON_PATH, {
+            "users": n_users,
+            "waves": waves,
+            "servers": SCALE_SERVERS,
+            "transfers": n_transfers,
+            "events": events,
+            "wall_s": round(wall_s, 4),
+            "events_per_s": round(eps, 1),
+            "lat_p50_s": round(pct["p50"], 6),
+            "lat_p99_s": round(pct["p99"], 6),
+            "ratio_users": RATIO_USERS,
+            "legacy_1k_events_per_s": round(eps_l, 1),
+            "batched_1k_events_per_s": round(eps_b, 1),
+            "speedup_1k": round(speedup, 2),
+            "smoke_scale": smoke_scale,
+        })
+
+    baseline = read_bench_json(BASELINE_PATH)
+    if baseline is not None:
+        floor = 0.8 * float(baseline["speedup_1k"])
+        if speedup < floor:
+            print(f"FAIL: census speedup regressed: {speedup:.1f}x vs "
+                  f"baseline floor {floor:.1f}x "
+                  f"(committed {baseline['speedup_1k']}x)",
+                  file=sys.stderr)
+            failures += 1
+    if not smoke_scale and speedup < 10.0:
+        print(f"FAIL: batched engine only {speedup:.1f}x the legacy "
+              "scalar engine at the 1k-user config (gate: 10x)",
+              file=sys.stderr)
+        failures += 1
+    return failures
+
+
 def run(smoke: bool = False) -> int:
     n_users = SMOKE_USERS if smoke else N_USERS
     n_clients = SMOKE_CLIENTS if smoke else N_CLIENTS
     n_files = SMOKE_SHARED_FILES if smoke else N_SHARED_FILES
     failures = _private_census(n_users)
     failures += _shared_mount_census(n_clients, n_files)
+    # modest-size scale census rides the standard sweep: the witness is
+    # a hard gate, the perf gates live in the CLI path (timer noise)
+    failures += _scale_witness()
+    scale_users = SCALE_SMOKE_USERS if smoke else SCALE_USERS
+    net = _scale_net(trace_limit=1000)
+    wall_us, (n_transfers, comps) = timed(
+        lambda: _run_scale_census(net, scale_users, SCALE_WAVES, "batched"))
+    pct = percentiles(comps, qs=(50, 99))
+    emit("sharing/scale_users", 0.0, scale_users)
+    emit("sharing/scale_events_per_s", wall_us,
+         f"{2 * n_transfers / (wall_us / 1e6):.0f}")
+    emit("sharing/scale_lat_p50_s", 0.0, f"{pct['p50']:.4f}")
+    emit("sharing/scale_lat_p99_s", 0.0, f"{pct['p99']:.4f}")
     return 1 if failures else 0
 
 
 if __name__ == "__main__":
-    rc = run(smoke="--smoke" in sys.argv)
-    if rc == 0:
-        print("sharing_census: OK (private with replicas placed; shared "
-              "mounts offload to replica sites)")
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="small privacy/shared-mount census")
+    ap.add_argument("--users", type=int, default=None,
+                    help="run ONLY the scale census at this many users "
+                         "(witness + speedup ratio + BENCH_census.json)")
+    ap.add_argument("--smoke-scale", action="store_true",
+                    help="scale census with fewer waves and no hard 10x "
+                         "gate; the baseline regression gate still runs")
+    args = ap.parse_args()
+    if args.users is not None or args.smoke_scale:
+        rc = 1 if _scale_census(args.users or 100_000,
+                                smoke_scale=args.smoke_scale) else 0
+        if rc == 0:
+            print("sharing_census: OK (batched census trace-identical "
+                  "to scalar; perf gates passed)")
+    else:
+        rc = run(smoke=args.smoke)
+        if rc == 0:
+            print("sharing_census: OK (private with replicas placed; "
+                  "shared mounts offload to replica sites)")
     raise SystemExit(rc)

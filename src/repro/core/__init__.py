@@ -6,8 +6,9 @@ holds it stable.  Topology is declared with the spec layer
 only as a deprecated shim over it.
 """
 from repro.core.transport import (  # noqa: F401
-    Network, Endpoint, LinkModel, Transfer, KeyPhrase, DisconnectedError,
-    AuthError, QuorumNotReachedError, KB, MB, GB,
+    Network, Endpoint, LinkModel, Transfer, TransferBatch, TransferRequest,
+    KeyPhrase, DisconnectedError, AuthError, QuorumNotReachedError,
+    KB, MB, GB,
 )
 from repro.core.striping import (  # noqa: F401
     plan_stripes, reassemble, StripePlan, StripedTransfer, TransferGroup,
@@ -38,7 +39,8 @@ __all__ = [
     "Fabric", "FabricSpec", "SiteSpec", "LinkSpec", "ReplicaPolicy",
     "EvictionSpec", "MountSpec", "Session", "UserFileServer", "ussh_login",
     # transport
-    "Network", "Endpoint", "LinkModel", "Transfer", "KeyPhrase",
+    "Network", "Endpoint", "LinkModel", "Transfer", "TransferBatch",
+    "TransferRequest", "KeyPhrase",
     "DisconnectedError", "AuthError", "QuorumNotReachedError",
     "KB", "MB", "GB",
     # striping

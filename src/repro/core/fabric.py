@@ -320,6 +320,10 @@ class Fabric:
         if spec.maintenance is not None:
             self.scheduler = MaintenanceScheduler(self.network,
                                                   spec.maintenance)
+        # intern every declared site (and all site pairs) up front so
+        # the engine's id tables and channel arrays are sized before
+        # the first reservation — steady-state traffic never grows them
+        self.network.prealloc([site.name for site in spec.sites])
         for site in spec.sites:
             Endpoint(site.name, self.network)
             if site.nic_budget is not None:

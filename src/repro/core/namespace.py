@@ -16,6 +16,7 @@ all file access through this client.  Semantics per the paper:
 """
 from __future__ import annotations
 
+import heapq
 import os
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -409,14 +410,20 @@ class XufsClient:
         # depth + NIC backlog included), so the W-th ack lands as early
         # as the current congestion state allows
         src = reps.home_name if home_acked else self.name
-        pending = []
+        launched = []
         for name in reps.replicas_by_cost(src, len(data)):
             if name in acked:
                 continue
             p = reps.begin_apply(name, rec.path, data, version, src=src)
             if p is not None:
-                pending.append(p)
-        pending.sort(key=lambda p: p.ack.completion)
+                launched.append(p)
+        # acks pop in completion order (heap, launch order on ties) —
+        # the event-engine analogue of sorting the pending list
+        ack_heap = [(p.ack.completion, i, p)
+                    for i, p in enumerate(launched)]
+        heapq.heapify(ack_heap)
+        pending = [p for _c, _i, p in
+                   (heapq.heappop(ack_heap) for _ in range(len(ack_heap)))]
         for p in pending:
             reps.complete_apply(p)
             self.oplog.mark_acked(rec, p.name, version=version)

@@ -19,7 +19,9 @@ from typing import List
 
 from repro.core.cache import VALID, DIRTY
 from repro.core.store import ObjectStat
-from repro.core.transport import DisconnectedError, Transfer
+from repro.core.transport import (
+    DisconnectedError, Transfer, TransferRequest,
+)
 
 SMALL_FILE = 64 * 1024
 
@@ -44,8 +46,16 @@ class Prefetcher:
             return 0
 
         m = cl._mount_for(todo[0].path)
+        # queue-aware replica routing prices each fill against the live
+        # channel state INCLUDING the fills already issued (that is the
+        # load-shedding feedback loop) — those must keep reserving
+        # inline.  Static routing reads no queue state, so the whole
+        # wave can be reserved as one same-epoch batch at the end —
+        # bit-identical reservations, one event-queue entry.
+        batched = m.replicas is None or not m.replicas.queue_aware
         fetched = 0
         transfers: List[Transfer] = []
+        reqs: List[TransferRequest] = []
         for st in todo:
             # cheapest fresh source first (the route is priced with the
             # file's actual size, so queue depth and NIC backlog from
@@ -65,8 +75,13 @@ class Prefetcher:
             if data is None:
                 continue
             # one stream per fill, pipelined over the pair's channel pool
-            transfers.append(
-                cl.network.transfer(src, cl.name, "prefetch", len(data)))
+            if batched:
+                reqs.append(
+                    TransferRequest(src, cl.name, "prefetch", len(data)))
+            else:
+                transfers.append(
+                    cl.network.transfer(src, cl.name, "prefetch",
+                                        len(data)))
             cl.cache.store_data(st.path, data, fresh, state=VALID)
             cl.cache.misses += 1
             cl.cache.record_fill(src)
@@ -75,5 +90,7 @@ class Prefetcher:
                 m.replicas.note_read(src, st.path)
             fetched += 1
         # block until the last fill lands: overlapped elapsed, not the sum
+        if reqs:
+            cl.network.wait_batch(cl.network.transfer_batch(reqs))
         cl.network.wait_all(transfers)
         return fetched

@@ -462,13 +462,28 @@ class ReplicaSet:
             return self.network.estimated_completion(src, dst, nbytes)
         return self.network.latency_between(src, dst)
 
+    def _route_costs(self, src: str, dsts: List[str],
+                     nbytes: int) -> List[float]:
+        """Costs of many candidates in one pass: one vectorized
+        ``estimate_batch`` call when queue-aware (element-identical to
+        per-candidate ``estimated_completion``), static latencies
+        otherwise."""
+        if not dsts:
+            return []
+        if self.queue_aware:
+            return self.network.estimate_batch(src, dsts, nbytes).tolist()
+        return [self.network.latency_between(src, d) for d in dsts]
+
     def replicas_by_cost(self, src: str, nbytes: int = 0) -> List[str]:
         """Replica names cheapest-first from ``src`` under the current
         queue/NIC state — the flusher launches fan-out in this order so
         the W-th ack lands as early as possible.  Partitioned pairs
         estimate to ``inf`` and sort last (they defer anyway)."""
-        return sorted(self.replicas,
-                      key=lambda n: self._route_cost(src, n, nbytes))
+        names = list(self.replicas)
+        costs = self._route_costs(src, names, nbytes)
+        # stable sort on cost == sorted(key=cost): ties keep replica order
+        return [n for _c, n in sorted(zip(costs, names),
+                                      key=lambda cn: cn[0])]
 
     # ---- catalog feed (rides the home callback channel) ------------------
     def _on_home_change(self, path: str, st: ObjectStat) -> None:
@@ -548,15 +563,17 @@ class ReplicaSet:
         walks the list, falling back on :class:`DisconnectedError`.
         """
         probe = ROUTE_PROBE_BYTES if nbytes is None else nbytes
-        ranked: List[Tuple[float, int, ReadSource]] = [(
-            self._route_cost(client_name, self.home_name, probe), 0,
-            (self.home_name, self.home_store, self.token))]
+        cands: List[Tuple[int, ReadSource]] = [
+            (0, (self.home_name, self.home_store, self.token))]
         for ep in self._fresh_sources(client_name, path):
             rep = self.replicas[ep]
             if path in rep.lagging:
                 continue
-            ranked.append((self._route_cost(client_name, ep, probe), 1,
-                           (ep, rep.store, rep.token)))
+            cands.append((1, (ep, rep.store, rep.token)))
+        # every candidate priced in one vectorized pass
+        costs = self._route_costs(client_name, [s[0] for _t, s in cands],
+                                  probe)
+        ranked = [(c, t, s) for c, (t, s) in zip(costs, cands)]
         ranked.sort(key=lambda t: (t[0], t[1]))
         return [src for _, _, src in ranked]
 
@@ -577,9 +594,8 @@ class ReplicaSet:
         nothing under the prefix proves nothing — metadata then routes
         home (``resync()``/``reattach()`` teach it the home vector).
         """
-        ranked: List[Tuple[float, int, ReadSource]] = [(
-            self._route_cost(client_name, self.home_name, 0), 0,
-            (self.home_name, self.home_store, self.token))]
+        cands: List[Tuple[int, ReadSource]] = [
+            (0, (self.home_name, self.home_store, self.token))]
         # directory match, not raw string prefix: "home/meta2/x" must not
         # count against a listing of "home/meta" — served by the
         # catalog's per-directory index, not a scan of every known path
@@ -593,9 +609,9 @@ class ReplicaSet:
                     continue
                 if all((self.catalog.version_at(p, name) or 0) >= fl
                        for p, fl in need):
-                    ranked.append((
-                        self._route_cost(client_name, name, 0), 1,
-                        (name, rep.store, rep.token)))
+                    cands.append((1, (name, rep.store, rep.token)))
+        costs = self._route_costs(client_name, [s[0] for _t, s in cands], 0)
+        ranked = [(c, t, s) for c, (t, s) in zip(costs, cands)]
         ranked.sort(key=lambda t: (t[0], t[1]))
         return [src for _, _, src in ranked]
 

@@ -18,7 +18,9 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
-from repro.core.transport import Endpoint, Network, Transfer, KB
+from repro.core.transport import (
+    Endpoint, KB, Network, Transfer, TransferBatch, TransferRequest,
+)
 
 STRIPE_THRESHOLD = 64 * KB   # transfers above this are striped
 MIN_BLOCK = 64 * KB          # minimum stripe block size
@@ -64,17 +66,25 @@ def reassemble(plan: StripePlan, parts: List[bytes]) -> bytes:
     return bytes(buf)
 
 
-@dataclass
 class TransferGroup:
-    """The in-flight stripes of one logical payload."""
+    """The in-flight stripes of one logical payload, backed by ONE
+    reservation batch (``Network.transfer_batch``)."""
 
-    plan: StripePlan
-    transfers: List[Transfer]
+    __slots__ = ("plan", "batch")
+
+    def __init__(self, plan: StripePlan, batch: TransferBatch):
+        self.plan = plan
+        self.batch = batch
+
+    @property
+    def transfers(self) -> List[Transfer]:
+        """Per-stripe records (materialized lazily from the batch)."""
+        return self.batch.transfers
 
     @property
     def completion(self) -> float:
         """When the whole payload has landed: max over stripe channels."""
-        return max(t.completion for t in self.transfers)
+        return self.batch.completion
 
 
 @dataclass
@@ -97,17 +107,16 @@ class StripedTransfer:
         plan = plan_stripes(len(payload),
                             max_stripes=max_stripes or self.max_stripes)
         n = max(plan.n_streams, 1)
-        transfers = [
-            self.network.transfer(src, dst, "stripe", ln, concurrency=n,
-                                  encrypted=encrypted, not_before=not_before)
+        reqs = [
+            TransferRequest(src, dst, "stripe", ln, n, encrypted, not_before)
             for _off, ln in plan.stripes
-        ] or [self.network.transfer(src, dst, "stripe", 0,
-                                    encrypted=encrypted,
-                                    not_before=not_before)]
+        ] or [TransferRequest(src, dst, "stripe", 0, 1, encrypted,
+                              not_before)]
+        batch = self.network.transfer_batch(reqs)
         # exercise the real data path: split + reassemble must round-trip
         parts = [payload[off:off + ln] for off, ln in plan.stripes]
         assert reassemble(plan, parts) == payload
-        return TransferGroup(plan=plan, transfers=transfers)
+        return TransferGroup(plan, batch)
 
     def send(self, src: str, dst: str, payload: bytes, *,
              encrypted: bool = False,
@@ -117,5 +126,5 @@ class StripedTransfer:
         t0 = self.network.clock
         group = self.begin(src, dst, payload, encrypted=encrypted,
                            max_stripes=max_stripes)
-        self.network.wait_all(group.transfers)
+        self.network.wait_batch(group.batch)
         return self.network.clock - t0

@@ -1,0 +1,249 @@
+"""Batched discrete-event engine vs the scalar transport path.
+
+The contract under test: ``transfer_batch``/``estimate_batch`` are
+*optimizations*, never model changes.  Any op list replayed through
+batches of any shape must leave the network bit-identical to the scalar
+replay — same trace, same clock after drain, same NIC backlogs, same
+accounting — on every gated topology (plain star, replicated links,
+quorum ack chains, NIC-budgeted).  Plus the event-queue invariant: the
+heap pops completions in nondecreasing order.
+"""
+import heapq
+
+import pytest
+
+from _propcheck import given, settings, strategies as st
+from repro.core import (
+    DisconnectedError, LinkModel, MB, Network,
+)
+
+NAMES = ("alpha", "beta", "gamma", "delta")
+
+
+def _mk_net(topo: str) -> Network:
+    net = Network(link=LinkModel(latency_s=0.050), channels_per_pair=3)
+    if topo == "replicated":
+        # near / far replica links, the fig_replica_routing shape
+        net.set_link("alpha", "gamma", LinkModel(latency_s=0.005))
+        net.set_link("alpha", "delta", LinkModel(latency_s=0.015))
+    elif topo == "nic":
+        net.set_nic_budget("beta", 50 * MB)
+        net.set_nic_budget("gamma", 20 * MB)
+    return net
+
+
+def _norm_ops(raw_ops):
+    """Map drawn (s, d, nbytes) rows onto valid distinct-endpoint ops."""
+    ops = []
+    for s, d, nb in raw_ops:
+        src = NAMES[s % 4]
+        dst = NAMES[(s + 1 + (d % 3)) % 4]
+        ops.append((src, dst, nb))
+    return ops
+
+
+def _chunks(seq, size):
+    for i in range(0, len(seq), size):
+        yield seq[i:i + size]
+
+
+def _unique_pair_chunks(ops):
+    """Greedy maximal runs of distinct pairs — forces the vectorized
+    batch path (a duplicate pair would fall back to sequential)."""
+    run, seen = [], set()
+    for op in ops:
+        key = (min(op[0], op[1]), max(op[0], op[1]))
+        if key in seen:
+            yield run
+            run, seen = [], set()
+        run.append(op)
+        seen.add(key)
+    if run:
+        yield run
+
+
+def _run_scalar(net, ops):
+    for src, dst, nb in ops:
+        net.transfer(src, dst, "op", nb)
+    return net.drain()
+
+
+def _assert_identical(net_a, net_b):
+    assert net_a.trace == net_b.trace
+    assert net_a.clock == net_b.clock
+    assert net_a.bytes_sent == net_b.bytes_sent
+    assert net_a.rpc_count == net_b.rpc_count
+    assert dict(net_a.per_endpoint_rpcs) == dict(net_b.per_endpoint_rpcs)
+    assert dict(net_a.per_endpoint_bytes) == dict(net_b.per_endpoint_bytes)
+    assert dict(net_a.per_pair_rpcs) == dict(net_b.per_pair_rpcs)
+    assert dict(net_a.per_pair_bytes) == dict(net_b.per_pair_bytes)
+    assert dict(net_a._nic_free) == dict(net_b._nic_free)
+    # busy_s folds float sums in different orders batch-vs-scalar;
+    # everything above is exact, this one gets a ULP tolerance
+    busy_a, busy_b = net_a.per_endpoint_busy_s, net_b.per_endpoint_busy_s
+    assert set(busy_a) == set(busy_b)
+    for ep, v in busy_a.items():
+        assert busy_b[ep] == pytest.approx(v, abs=1e-9)
+
+
+OPS = st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 3),
+              st.integers(0, 256 * 1024)),
+    min_size=0, max_size=40)
+
+
+@pytest.mark.parametrize("topo", ["plain", "replicated", "nic"])
+@settings(max_examples=10)
+@given(OPS, st.integers(1, 7))
+def test_batched_replay_identical(topo, raw_ops, chunk):
+    """Fixed-size chunks (duplicate-pair heavy with 4 endpoints, so the
+    sequential fallback is exercised) leave state identical to scalar."""
+    ops = _norm_ops(raw_ops)
+    net_s = _mk_net(topo)
+    _run_scalar(net_s, ops)
+    net_b = _mk_net(topo)
+    for group in _chunks(ops, chunk):
+        net_b.transfer_batch([(s, d, "op", nb) for s, d, nb in group])
+    net_b.drain()
+    _assert_identical(net_s, net_b)
+
+
+@pytest.mark.parametrize("topo", ["plain", "replicated", "nic"])
+@settings(max_examples=10)
+@given(OPS)
+def test_vectorized_path_identical(topo, raw_ops):
+    """Unique-pair chunks take the fully vectorized path; still
+    bit-identical to scalar."""
+    ops = _norm_ops(raw_ops)
+    net_s = _mk_net(topo)
+    _run_scalar(net_s, ops)
+    net_b = _mk_net(topo)
+    for group in _unique_pair_chunks(ops):
+        net_b.transfer_batch([(s, d, "op", nb) for s, d, nb in group])
+    net_b.drain()
+    _assert_identical(net_s, net_b)
+
+
+@settings(max_examples=10)
+@given(OPS)
+def test_nic_conservation(raw_ops):
+    """A budgeted NIC's backlog clock covers every byte it carried:
+    backlog >= sum(bytes) / budget, scalar and batched agree exactly."""
+    ops = _norm_ops(raw_ops)
+    net = _mk_net("nic")
+    for group in _chunks(ops, 5):
+        net.transfer_batch([(s, d, "op", nb) for s, d, nb in group])
+    net.drain()
+    for ep, budget in net.nic_budgets.items():
+        carried = sum(nb for s, d, nb in ops if ep in (s, d) and nb > 0)
+        if carried:
+            assert net._nic_free[ep] + 1e-9 >= carried / budget
+
+
+@pytest.mark.parametrize("topo", ["plain", "replicated", "nic"])
+@settings(max_examples=10)
+@given(OPS, st.integers(1, 6))
+def test_quorum_ack_chain_identical(topo, raw_ops, chunk):
+    """Quorum-style ack chains (ack reserved with ``not_before`` at the
+    data's completion) drain in the same order batched as scalar."""
+    ops = _norm_ops(raw_ops)
+    # same algorithm both ways: per group, all stores then all acks
+    # (acks share the store's pair, so issue order IS the contract)
+    net_s = _mk_net(topo)
+    for group in _chunks(ops, chunk):
+        datas = [net_s.transfer(s, d, "store", nb) for s, d, nb in group]
+        for (s, d, _nb), t in zip(group, datas):
+            net_s.transfer(d, s, "ack", 128, not_before=t.completion)
+    order_s = sorted((t.completion, t.src, t.dst, t.start, t.channel)
+                     for t in net_s.outstanding())
+    net_s.drain()
+
+    net_b = _mk_net(topo)
+    for group in _chunks(ops, chunk):
+        data = net_b.transfer_batch(
+            [(s, d, "store", nb) for s, d, nb in group])
+        net_b.transfer_batch(
+            [(d, s, "ack", 128, 1, False, co)
+             for (s, d, _nb), co in zip(group,
+                                        data.completions.tolist())])
+    order_b = sorted((t.completion, t.src, t.dst, t.start, t.channel)
+                     for t in net_b.outstanding())
+    net_b.drain()
+    assert order_s == order_b
+    _assert_identical(net_s, net_b)
+
+
+@settings(max_examples=10)
+@given(OPS, st.integers(1, 5))
+def test_event_heap_pops_nondecreasing(raw_ops, chunk):
+    """The event queue is a real heap: popping the pending set yields
+    completions in nondecreasing order."""
+    ops = _norm_ops(raw_ops)
+    net = _mk_net("plain")
+    for group in _chunks(ops, chunk):
+        net.transfer_batch([(s, d, "op", nb) for s, d, nb in group])
+    heap = list(net._event_heap)
+    heapq.heapify(heap)
+    last = float("-inf")
+    while heap:
+        completion, _seq, _item = heapq.heappop(heap)
+        assert completion >= last
+        last = completion
+
+
+@pytest.mark.parametrize("topo", ["plain", "replicated", "nic"])
+@settings(max_examples=10)
+@given(OPS, st.integers(0, 256 * 1024), st.floats(0.0, 2.0))
+def test_estimate_batch_matches_scalar(topo, raw_ops, nbytes, not_before):
+    """estimate_batch is element-for-element float-identical to
+    estimated_completion, including on a loaded network."""
+    ops = _norm_ops(raw_ops)
+    net = _mk_net(topo)
+    for group in _chunks(ops, 4):
+        net.transfer_batch([(s, d, "op", nb) for s, d, nb in group])
+    srcs = [a for a in NAMES for b in NAMES if a != b]
+    dsts = [b for a in NAMES for b in NAMES if a != b]
+    got = net.estimate_batch(srcs, dsts, nbytes, not_before=not_before)
+    for i, (s, d) in enumerate(zip(srcs, dsts)):
+        assert got[i] == net.estimated_completion(
+            s, d, nbytes, not_before=not_before)
+
+
+def test_partitioned_batch_raises_like_scalar():
+    """A batch touching a partitioned pair raises after applying exactly
+    the prefix a sequential caller would have applied."""
+    ops = [("alpha", "beta", 1000), ("alpha", "gamma", 2000),
+           ("beta", "gamma", 3000), ("alpha", "delta", 500)]
+
+    net_s = _mk_net("plain")
+    net_s.partition("beta", "gamma")
+    with pytest.raises(DisconnectedError):
+        for src, dst, nb in ops:
+            net_s.transfer(src, dst, "op", nb)
+
+    net_b = _mk_net("plain")
+    net_b.partition("beta", "gamma")
+    with pytest.raises(DisconnectedError):
+        net_b.transfer_batch([(s, d, "op", nb) for s, d, nb in ops])
+
+    assert net_s.trace == net_b.trace
+    assert net_s.bytes_sent == net_b.bytes_sent
+    net_s.drain()
+    net_b.drain()
+    assert net_s.clock == net_b.clock
+
+
+def test_caller_pair_ids_identical():
+    """Caller-supplied pair_ids (intern_pairs) change nothing."""
+    ops = [("alpha", "beta", 1000), ("alpha", "gamma", 2000),
+           ("beta", "delta", 3000)]
+    net_a = _mk_net("plain")
+    net_a.transfer_batch([(s, d, "op", nb) for s, d, nb in ops])
+    net_a.drain()
+    net_b = _mk_net("plain")
+    pids = net_b.intern_pairs([s for s, d, nb in ops],
+                              [d for s, d, nb in ops])
+    net_b.transfer_batch([(s, d, "op", nb) for s, d, nb in ops],
+                         pair_ids=pids)
+    net_b.drain()
+    _assert_identical(net_a, net_b)

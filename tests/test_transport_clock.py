@@ -142,7 +142,7 @@ def test_fire_and_forget_does_not_accumulate_outstanding():
     for _ in range(2000):
         net.transfer("e0", "e1", "ff", 1000)
         net.advance(0.5)                 # clock sails past the completion
-    assert len(net._outstanding) < 600
+    assert len(net._event_heap) < 600
     assert net.outstanding() == []       # nothing actually in flight
     assert net.drain() == net.clock      # and drain is a no-op
 
