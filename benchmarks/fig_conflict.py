@@ -1,0 +1,332 @@
+"""Concurrent-writer safety: divergence, leases, and chaos — self-gated.
+
+Two sessions (``login`` + ``attach``) share one home and one replica set
+and write the *same* path while a :class:`FaultPlan` cuts the home
+links.  Four scenarios on the virtual WAN clock:
+
+  A. **Divergent branches.**  A declared home outage strands sci on the
+     quorum path while bob writes straight at home: two vector-timestamp
+     branches that know nothing of each other.  Gate: reconcile detects
+     exactly one conflict, deterministic LWW picks sci, the losing
+     branch survives verbatim in the ConflictRecord (zero silent
+     clobbers), and anti-entropy converges the replicas on the winner.
+  B. **Lease serialization.**  Both writers lose home; with
+     ``WriteLeaseSpec`` armed the first pump takes the per-path lease on
+     the replica set and the second *defers* instead of diverging.
+     Gate: ``lease_contended > 0``, zero conflicts, the late writer
+     lands causally on top (merged frontier), no lease left dangling.
+  C. **Flapping chaos.**  Interleaved FlapEvents on both home links
+     while the writers keep writing.  Gate: after the windows lapse and
+     both sides drain + reconcile, nothing is pending or parked, home
+     holds a written payload, every detected conflict preserves both
+     branches, replicas converge — and the whole run is deterministic
+     (two universes, bit-identical traces).
+  D. **Zero-cost witnesses.**  Arming an *empty* FaultPlan, or
+     configuring ``write_lease`` on a writer that never leaves the
+     connected path, must leave the transport trace bit-identical to a
+     fabric without them.
+
+Rows (modeled virtual-WAN quantities):
+
+  conflict/divergent_conflicts      scenario A (== 1)
+  conflict/divergent_winner         scenario A LWW pick ("ours" = sci)
+  conflict/branches_preserved       scenario A (1 = no silent clobber)
+  conflict/replicas_converged       scenario A post-resync
+  conflict/lease_contended          scenario B (> 0)
+  conflict/lease_conflicts          scenario B (== 0)
+  conflict/merged_frontier          scenario B causal order on top
+  conflict/flap_conflicts           scenario C detected divergences
+  conflict/flap_acked_lost          scenario C (== 0)
+  conflict/flap_drained             scenario C (1 = no parked leftovers)
+  conflict/flap_rerun_identical     scenario C determinism witness
+  conflict/trace_unarmed_identical  scenario D empty-plan witness
+  conflict/trace_lease_unset_identical scenario D connected-path witness
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import sys
+import tempfile
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from benchmarks.common import emit, star_fabric, timed
+
+HOME_LATENCY = 0.060
+PATH = "home/shared/doc.bin"
+
+
+def _two_writer_fab(root: str, tag: str, write_lease=None):
+    from repro.core import MountSpec, ReplicaPolicy, SiteSpec
+
+    fab = star_fabric(f"{root}/home-{tag}", f"{root}/site-{tag}",
+                      latency_s=HOME_LATENCY,
+                      replica_latencies={"r1": 0.005, "r2": 0.015},
+                      extra_sites=(SiteSpec(
+                          "site2", root=f"{root}/site2-{tag}"),))
+    s = fab.login("sci", replicas=ReplicaPolicy(
+        sites=("r1", "r2"), write_quorum="majority",
+        write_lease=write_lease))
+    bob = fab.attach(s, "site2", owner="bob", mounts=[MountSpec("home/")])
+    return fab, s, bob
+
+
+# ---- scenario A: divergent branches under a declared outage -----------------
+
+def _divergent(root: str, size: int):
+    from repro.core import FaultPlan, PartitionEvent
+
+    fab, s, bob = _two_writer_fab(root, "a")
+    net = s.network
+    t0 = net.clock
+    fab.arm_faults(FaultPlan(events=(
+        PartitionEvent(at_s=t0, a="site", b="home", duration_s=30.0),)))
+    sci_bytes, bob_bytes = b"S" * size, b"B" * (size - 1024)
+    with s.client.open(PATH, "w") as f:
+        f.write(sci_bytes)
+    s.client.pump()                        # parks at quorum (r1 + r2)
+    with bob.open(PATH, "w") as f:
+        f.write(bob_bytes)
+    bob.pump()                             # lands at home, vts {bob:1}
+    net.advance(t0 + 30.0 - net.clock)     # outage window lapses
+    reconciled = s.client.reconcile()
+    conflicts = list(s.client.conflicts)
+    s.replicas.resync()
+    home = s.server.store.get(s.token, PATH)[0]
+    converged = all(rep.store.get(rep.token, PATH)[0] == home
+                    for rep in s.replicas.replicas.values())
+    preserved = (len(conflicts) == 1
+                 and conflicts[0].ours_data == sci_bytes
+                 and conflicts[0].theirs_data == bob_bytes)
+    return {
+        "reconciled": reconciled,
+        "conflicts": conflicts,
+        "winner": conflicts[0].winner if conflicts else "none",
+        "home_is_sci": home == sci_bytes,
+        "frontier": s.server.store.vts_of(PATH),
+        "preserved": preserved,
+        "converged": converged,
+        "parked": len(s.client.oplog.unreconciled()),
+    }
+
+
+# ---- scenario B: leases serialize two stranded quorum writers ---------------
+
+def _lease_serialized(root: str, size: int):
+    from repro.core import FaultPlan, PartitionEvent, WriteLeaseSpec
+
+    fab, s, bob = _two_writer_fab(root, "b",
+                                  write_lease=WriteLeaseSpec(ttl_s=60.0))
+    net = s.network
+    t0 = net.clock
+    fab.arm_faults(FaultPlan(events=(
+        PartitionEvent(at_s=t0, a="site", b="home", duration_s=30.0),
+        PartitionEvent(at_s=t0, a="site2", b="home", duration_s=30.0),)))
+    with s.client.open(PATH, "w") as f:
+        f.write(b"S" * size)
+    s.client.pump()                        # sci parks, holds the lease
+    with bob.open(PATH, "w") as f:
+        f.write(b"B" * size)
+    bob.pump()                             # contended: bob defers, queued
+    bob_deferred = len(bob.oplog.pending())
+    net.advance(t0 + 30.0 - net.clock)     # both windows lapse
+    s.client.reconcile()                   # sci lands; lease released
+    bob.pump()                             # bob retries, lands ON TOP
+    home = s.server.store.get(s.token, PATH)[0]
+    dangling = sum(1 for rep in s.replicas.replicas.values()
+                   if rep.store.lock_owner(PATH, net.clock) is not None)
+    return {
+        "contended": s.replicas.lease_contended,
+        "acquired": s.replicas.lease_acquired,
+        "bob_deferred": bob_deferred,
+        "conflicts": len(s.client.conflicts) + len(bob.conflicts),
+        "home_is_bob": home == b"B" * size,
+        "frontier": s.server.store.vts_of(PATH),
+        "dangling": dangling,
+    }
+
+
+# ---- scenario C: flapping chaos, drain, converge, determinism ---------------
+
+def _flap_chaos(root: str, tag: str, size: int, rounds: int):
+    from repro.core import FaultPlan, FlapEvent
+
+    fab, s, bob = _two_writer_fab(root, tag)
+    net = s.network
+    t0 = net.clock
+    flaps = max(1, rounds // 2)
+    fab.arm_faults(FaultPlan(events=(
+        FlapEvent(at_s=t0 + 1.0, a="site", b="home", down_s=6.0,
+                  period_s=16.0, count=flaps),
+        FlapEvent(at_s=t0 + 9.0, a="site2", b="home", down_s=6.0,
+                  period_s=16.0, count=flaps),)))
+    writers = ((s.client, "sci"), (bob, "bob"))
+    payloads = set()
+    for rnd in range(rounds):
+        for client, owner in writers:
+            data = f"{owner}:{rnd}:".encode() * max(1, size // 8)
+            payloads.add(data)
+            with client.open(PATH, "w") as f:
+                f.write(data)
+            client.pump()
+        net.advance(8.0)
+        for client, _ in writers:
+            client.pump()
+            client.reconcile()
+    net.advance(max(0.0, (t0 + 1.0 + flaps * 16.0) - net.clock) + 10.0)
+    for _ in range(3):
+        for client, _ in writers:
+            client.pump()
+            client.reconcile()
+    s.replicas.resync()
+    home = s.server.store.get(s.token, PATH)[0]
+    conflicts = list(s.client.conflicts) + list(bob.conflicts)
+    drained = not any(c.oplog.pending() or c.oplog.unreconciled()
+                      for c, _ in writers)
+    converged = all(rep.store.get(rep.token, PATH)[0] == home
+                    for rep in s.replicas.replicas.values())
+    acked_lost = 0 if (home in payloads and all(
+        c.ours_data in payloads and c.theirs_data in payloads
+        for c in conflicts)) else 1
+    return {
+        "conflicts": len(conflicts),
+        "acked_lost": acked_lost,
+        "drained": drained,
+        "converged": converged,
+        "trace": tuple(net.trace),
+    }
+
+
+# ---- scenario D: zero-cost witnesses ----------------------------------------
+
+def _drive_quorum(fab, size: int, write_lease=None):
+    from repro.core import ReplicaPolicy
+
+    s = fab.login("bench", replicas=ReplicaPolicy(
+        sites=("r1", "r2"), write_quorum="majority",
+        write_lease=write_lease))
+    with s.client.open("home/d/t.bin", "w") as f:
+        f.write(b"T" * size)
+    s.client.pump()                        # connected: straight to home
+    with s.client.open("home/d/t.bin") as f:
+        f.read()
+    return s.network.trace
+
+
+def _trace_witnesses(root: str, size: int):
+    from repro.core import FaultPlan, WriteLeaseSpec
+
+    def fresh(tag):
+        return star_fabric(f"{root}/home-{tag}", f"{root}/site-{tag}",
+                           latency_s=HOME_LATENCY,
+                           replica_latencies={"r1": 0.005, "r2": 0.015})
+
+    plain = _drive_quorum(fresh("d0"), size)
+    armed_fab = fresh("d1")
+    armed_fab.arm_faults(FaultPlan())      # armed but empty
+    armed = _drive_quorum(armed_fab, size)
+    leased = _drive_quorum(fresh("d2"), size,
+                           write_lease=WriteLeaseSpec(ttl_s=10.0))
+    return plain == armed, plain == leased
+
+
+def run(smoke: bool = False) -> int:
+    from repro.core import KB
+
+    size = 64 * KB if smoke else 512 * KB
+    rounds = 6 if smoke else 12
+    root = tempfile.mkdtemp(prefix="fig_conflict_")
+    failures = []
+    try:
+        # ---- A: divergent branches ---------------------------------------
+        us, a = timed(lambda: _divergent(root, size))
+        emit("conflict/divergent_conflicts", us, len(a["conflicts"]))
+        emit("conflict/divergent_winner", 0.0, a["winner"])
+        emit("conflict/branches_preserved", 0.0, int(a["preserved"]))
+        emit("conflict/replicas_converged", 0.0, int(a["converged"]))
+        if len(a["conflicts"]) != 1:
+            failures.append(f"divergent write produced {len(a['conflicts'])}"
+                            " conflict(s), expected exactly 1")
+        if a["winner"] != "ours" or not a["home_is_sci"]:
+            failures.append("deterministic LWW did not land sci's branch "
+                            f"(winner={a['winner']})")
+        if not a["preserved"]:
+            failures.append("losing branch not preserved verbatim in the "
+                            "ConflictRecord (silent clobber)")
+        if a["frontier"] != {"sci": 1, "bob": 1}:
+            failures.append(f"merged frontier {a['frontier']} does not "
+                            "cover both branches")
+        if not a["converged"] or a["parked"]:
+            failures.append("replicas did not converge on the resolved "
+                            "branch after resync")
+
+        # ---- B: lease serialization --------------------------------------
+        us, b = timed(lambda: _lease_serialized(root, size))
+        emit("conflict/lease_contended", us, b["contended"])
+        emit("conflict/lease_conflicts", 0.0, b["conflicts"])
+        emit("conflict/merged_frontier", 0.0,
+             ";".join(f"{k}:{v}" for k, v in sorted(b["frontier"].items())))
+        if b["contended"] <= 0 or b["bob_deferred"] != 1:
+            failures.append("second quorum writer never contended the "
+                            "write lease (serialization broken)")
+        if b["conflicts"] != 0:
+            failures.append(f"{b['conflicts']} conflict(s) under lease "
+                            "serialization, expected 0")
+        if not b["home_is_bob"] or b["frontier"] != {"sci": 1, "bob": 1}:
+            failures.append("deferred writer did not land causally on top "
+                            "of the lease holder")
+        if b["dangling"]:
+            failures.append(f"{b['dangling']} replica lease(s) left "
+                            "dangling after the writers drained")
+
+        # ---- C: flapping chaos + determinism -----------------------------
+        us, c1 = timed(lambda: _flap_chaos(root, "c1", size, rounds))
+        c2 = _flap_chaos(root, "c2", size, rounds)
+        emit("conflict/flap_conflicts", us, c1["conflicts"])
+        emit("conflict/flap_acked_lost", 0.0, c1["acked_lost"])
+        emit("conflict/flap_drained", 0.0, int(c1["drained"]))
+        emit("conflict/flap_rerun_identical", 0.0,
+             int(c1["trace"] == c2["trace"]))
+        if c1["acked_lost"]:
+            failures.append("flap chaos lost an acknowledged write (home "
+                            "bytes or a conflict branch escaped the "
+                            "written set)")
+        if not c1["drained"]:
+            failures.append("writers still have pending/parked records "
+                            "after the flap windows lapsed")
+        if not c1["converged"]:
+            failures.append("replicas diverged from home after flap chaos")
+        if c1["trace"] != c2["trace"]:
+            failures.append("flap chaos is not deterministic: identical "
+                            "universes produced different traces")
+
+        # ---- D: zero-cost witnesses --------------------------------------
+        us, (armed_same, lease_same) = timed(
+            lambda: _trace_witnesses(root, size))
+        emit("conflict/trace_unarmed_identical", us, int(armed_same))
+        emit("conflict/trace_lease_unset_identical", 0.0, int(lease_same))
+        if not armed_same:
+            failures.append("arming an empty FaultPlan changed the "
+                            "transport trace (zero-cost guarantee broken)")
+        if not lease_same:
+            failures.append("write_lease config changed the connected-path "
+                            "trace (lease must cost zero wire off the "
+                            "quorum path)")
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+    for msg in failures:
+        print(f"FAIL: {msg}", file=sys.stderr)   # keep stdout valid CSV
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    rc = run(smoke="--smoke" in sys.argv)
+    if rc == 0:
+        print("conflict: OK (divergent branches => one ConflictRecord, LWW "
+              "deterministic, loser preserved; leases serialize stranded "
+              "writers with zero conflicts; flap chaos drains, converges, "
+              "deterministic; unarmed machinery trace-identical)")
+    raise SystemExit(rc)

@@ -80,7 +80,9 @@ def _tail_latency(root: str, mode: str, rounds: int, size: int):
     ``scheduled``: the same upkeep cadence rides think time through the
     scheduler; the read pays only its own fill.
     """
-    from repro.core import MaintenanceSpec, ReplicaPolicy
+    from repro.core import (
+        FaultPlan, FlapEvent, MaintenanceSpec, ReplicaPolicy,
+    )
 
     n_files = 4
     spec = MaintenanceSpec(resync_period_s=THINK_S,
@@ -101,14 +103,19 @@ def _tail_latency(root: str, mode: str, rounds: int, size: int):
         s.server.store.put(s.token, p, b"S" * size)
     s.replicas.resync()
     net = s.network
+    # the WAN flaps on a declared cadence (was a hand-rolled
+    # ``net.partition(...)`` every 8th round): ~one 2*THINK_S outage per
+    # 8 think windows, so anti-entropy work keeps piling up and healing
+    # mid-run in both modes identically
+    fab.arm_faults(FaultPlan(events=(
+        FlapEvent(at_s=net.clock + 3 * THINK_S, a="home", b="r1",
+                  down_s=2 * THINK_S, period_s=8 * THINK_S,
+                  count=max(1, rounds // 8)),)))
     lats = []
     for i in range(rounds):
         # producer rewrites one object at home: the replica goes stale
         s.server.store.put(s.token, paths[i % n_files],
                            bytes([65 + i % 26]) * size)
-        if i % 8 == 3:
-            # the WAN flaps: anti-entropy work piles up, heals mid-run
-            net.partition("home", "r1", duration=2 * THINK_S)
         # think time: scheduled mode hosts the upkeep here; inline mode
         # just idles — its upkeep fires on the next read, below
         if mode == "scheduled":
@@ -135,7 +142,7 @@ def _tail_latency(root: str, mode: str, rounds: int, size: int):
 # ---- scenario B: dead-letter + revive ---------------------------------------
 
 def _deadletter_lifecycle(root: str):
-    from repro.core import ReplicaPolicy
+    from repro.core import FaultPlan, PartitionEvent, ReplicaPolicy
 
     fab = _maintained_fabric(f"{root}/home-dl", f"{root}/site-dl",
                              replica_latencies={"r1": 0.005})
@@ -144,14 +151,18 @@ def _deadletter_lifecycle(root: str):
     s.server.store.put(s.token, path, b"A" * 65536)
     s.replicas.resync()
     net, sched = s.network, s.scheduler
-    net.partition("site", "home")
     t0 = net.clock
+    # declared 40 s site<->home outage (was a hand-rolled partition +
+    # heal pair); the scheduler pumps the plan as it walks the clock and
+    # the window auto-heals exactly at t0+40
+    fab.arm_faults(FaultPlan(events=(
+        PartitionEvent(at_s=t0, a="site", b="home", duration_s=40.0),)))
     sched.run_until(t0 + 40.0)        # due +30, retries +31/+33/+37, dead
     report = sched.report()
     dls = [d for d in report.dead_letters if d.task.startswith("resync:")]
     dl = dls[0] if dls else None
-    # the heal: home writes once more, then the operator revives the task
-    net.heal("site", "home")
+    # healed by the lapsed window: home writes once more, then the
+    # operator revives the task
     s.server.store.put(s.token, path, b"B" * 65536)
     sched.revive("resync:bench@site")
     sched.run_until(net.clock + 31.0)

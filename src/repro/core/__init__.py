@@ -16,16 +16,22 @@ from repro.core.striping import (  # noqa: F401
 )
 from repro.core.store import HomeStore, ObjectStat  # noqa: F401
 from repro.core.cache import CacheSpace, CacheEntry, CacheStats  # noqa: F401
-from repro.core.oplog import MetaOpQueue, OpRecord  # noqa: F401
+from repro.core.oplog import (  # noqa: F401
+    MetaOpQueue, OpRecord, vts_concurrent, vts_dominates, vts_merge,
+)
 from repro.core.callbacks import NotificationManager  # noqa: F401
 from repro.core.replication import (  # noqa: F401
     EvictionSpec, PendingApply, Replica, ReplicaCatalog, ReplicaSet,
-    WritePolicy,
+    WriteLeaseContended, WriteLeaseSpec, WritePolicy,
 )
 from repro.core.lease import LeaseManager  # noqa: F401
 from repro.core.tasks import (  # noqa: F401
-    DeadLetter, LockTable, MaintenanceReport, MaintenanceScheduler,
-    MaintenanceSpec, RetryPolicy, ScheduledTask,
+    ConflictRecord, DeadLetter, LockTable, MaintenanceReport,
+    MaintenanceScheduler, MaintenanceSpec, RetryPolicy, ScheduledTask,
+)
+from repro.core.faults import (  # noqa: F401
+    CrashEvent, FaultInjector, FaultPlan, FlapEvent, HealEvent,
+    PartitionEvent,
 )
 from repro.core.namespace import XufsClient, XufsFile, Mount  # noqa: F401
 from repro.core.prefetch import Prefetcher  # noqa: F401
@@ -52,6 +58,12 @@ __all__ = [
     # coherency / replication / leases
     "NotificationManager", "PendingApply", "Replica", "ReplicaCatalog",
     "ReplicaSet", "WritePolicy", "LeaseManager",
+    # concurrent-writer safety (docs/consistency.md)
+    "WriteLeaseSpec", "WriteLeaseContended", "ConflictRecord",
+    "vts_merge", "vts_dominates", "vts_concurrent",
+    # deterministic fault injection (docs/maintenance.md)
+    "FaultPlan", "FaultInjector", "PartitionEvent", "HealEvent",
+    "FlapEvent", "CrashEvent",
     # background maintenance plane (docs/maintenance.md)
     "MaintenanceSpec", "MaintenanceScheduler", "MaintenanceReport",
     "RetryPolicy", "ScheduledTask", "DeadLetter", "LockTable",

@@ -46,8 +46,11 @@ import warnings
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.namespace import XufsClient
-from repro.core.replication import EvictionSpec, ReplicaSet, WritePolicy
+from repro.core.replication import (
+    EvictionSpec, ReplicaSet, WriteLeaseSpec, WritePolicy,
+)
 from repro.core.session import Session, UserFileServer, _authenticate
 from repro.core.store import HomeStore
 from repro.core.tasks import (
@@ -145,6 +148,14 @@ class ReplicaPolicy:
     watermarks (``docs/maintenance.md``).  Unset ⇒ replicas mirror the
     whole home space, traces bit-identical to the pre-eviction fabric.
 
+    ``write_lease`` is an optional :class:`WriteLeaseSpec`: when set,
+    the flusher serializes concurrent writers of one path through
+    short-TTL write leases on the replica set before quorum fan-out
+    (``docs/consistency.md``).  Unset (default) ⇒ no lease traffic,
+    traces bit-identical to the pre-lease fabric; concurrent branches
+    written around a dead home are still caught at reconcile time by
+    their vector timestamps.
+
     ``capacity_bytes`` survives as a deprecated alias that assembles
     ``EvictionSpec(capacity=...)`` and warns once per process (the
     ``ussh_login`` shim pattern).
@@ -155,6 +166,7 @@ class ReplicaPolicy:
     queue_aware: bool = True
     capacity_bytes: Optional[int] = None
     eviction: Optional[EvictionSpec] = None
+    write_lease: Optional[WriteLeaseSpec] = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "sites", tuple(self.sites))
@@ -320,6 +332,9 @@ class Fabric:
         if spec.maintenance is not None:
             self.scheduler = MaintenanceScheduler(self.network,
                                                   spec.maintenance)
+        #: armed FaultInjector (:meth:`arm_faults`); None ⇒ no fault
+        #: plan, every wire event bit-identical to the unarmed fabric
+        self.faults: Optional[FaultInjector] = None
         # intern every declared site (and all site pairs) up front so
         # the engine's id tables and channel arrays are sized before
         # the first reservation — steady-state traffic never grows them
@@ -353,6 +368,38 @@ class Fabric:
                 "needs one (SiteSpec(root=...) or the login override)")
         return root
 
+    # ---- fault injection -------------------------------------------------
+    def arm_faults(self, plan: FaultPlan) -> FaultInjector:
+        """Arm a declarative :class:`FaultPlan` on this fabric's clock.
+
+        The network pumps the injector lazily before every partition-
+        sensitive operation, and the maintenance scheduler (when one is
+        declared) walks its clock through fault times — so partitions,
+        heals, flaps, and crashes fire exactly at their declared
+        instants with no hand-rolled ``network.partition(...)``
+        choreography at the call sites.  Arming an empty plan changes
+        no trace; re-arming replaces the prior plan.  Returns the
+        injector for counter inspection (``fired`` / ``crashes``).
+        """
+        injector = FaultInjector(self.network, plan,
+                                 crash_fn=self._crash_site)
+        self.faults = injector
+        self.network.arm_faults(injector)
+        if self.scheduler is not None:
+            self.scheduler.faults = injector
+        return injector
+
+    def _crash_site(self, site: str) -> int:
+        """CrashEvent hook: crash every user file server hosted at
+        ``site`` (auth state and subscriptions drop — the paper's
+        crontab restart maps to ``Session.remount()`` afterwards)."""
+        crashed = 0
+        for s in self.sessions:
+            if s.server.endpoint.name == site:
+                s.server.crash()
+                crashed += 1
+        return crashed
+
     # ---- background maintenance ------------------------------------------
     def maintenance_report(self) -> Optional[MaintenanceReport]:
         """Snapshot of the maintenance plane (None when no
@@ -373,6 +420,9 @@ class Fabric:
         sched = self.scheduler
         if sched is None:
             return
+        # conflicts this client detects at reconcile time surface on the
+        # shared MaintenanceReport (sibling of the dead-letter record)
+        client._conflict_sink = sched.note_conflict
         spec = self.spec.maintenance
         tag = f"{owner}@{site}"
         net = self.network
@@ -526,7 +576,8 @@ class Fabric:
                               home_store=store, token=token,
                               write_quorum=replicas.write_quorum,
                               queue_aware=replicas.queue_aware,
-                              eviction=replicas.eviction)
+                              eviction=replicas.eviction,
+                              write_lease=replicas.write_lease)
             for rname in replicas.sites:
                 if not self.network.has_link(home, rname):
                     # replica sites are near the compute site but WAN-far

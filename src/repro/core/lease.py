@@ -32,6 +32,11 @@ class LeaseManager:
     #: server-side TTL keeps running, so these must be re-verified (or
     #: dropped) before the client may keep acting as lock holder.
     at_risk: Set[str] = field(default_factory=set)
+    #: Releases a partition interrupted: we no longer act as holder, but
+    #: the server still does — its TTL keeps other writers locked out
+    #: until it lapses.  ``reverify_at_risk`` finishes these releases on
+    #: heal instead of waiting out the TTL.
+    pending_release: Set[str] = field(default_factory=set)
     renew_interruptions: int = 0
 
     def acquire(self, path: str, localized: bool = False) -> bool:
@@ -56,10 +61,17 @@ class LeaseManager:
                 self.network.rpc(self.client_name, self.server_name,
                                  "lock_release")
                 self.store.release_lock(self.token, path, self.owner)
+                self.at_risk.discard(path)
             except DisconnectedError:
-                pass   # lease will expire server-side
+                # The server still holds the lock and its TTL keeps
+                # running, blocking other writers until it lapses.
+                # Remember the intent (mirror of the renew_all at-risk
+                # fix) so the release completes on heal instead of the
+                # lease silently vanishing from our books while the
+                # server honors it.
+                self.pending_release.add(path)
+                self.at_risk.add(path)
             self.held.discard(path)
-            self.at_risk.discard(path)
 
     def renew_all(self) -> int:
         """Periodic renewal; drops leases the server no longer honors.
@@ -115,13 +127,23 @@ class LeaseManager:
         kept = dropped = 0
         probes = []
         for path in sorted(self.at_risk):
+            op = ("lock_release" if path in self.pending_release
+                  else "lock_reverify")
             try:
                 probes.append((path, self.network.transfer(
-                    self.client_name, self.server_name, "lock_reverify")))
+                    self.client_name, self.server_name, op)))
             except DisconnectedError:
                 break            # still partitioned: the rest stay at risk
         self.network.wait_all([t for _, t in probes])
         for path, _t in probes:
+            if path in self.pending_release:
+                # finish the interrupted release: the server-side lock
+                # goes away now instead of at TTL expiry
+                self.store.release_lock(self.token, path, self.owner)
+                self.pending_release.discard(path)
+                self.at_risk.discard(path)
+                dropped += 1
+                continue
             if self.store.renew_lock(self.token, path, self.owner, self.ttl,
                                      self.network.clock):
                 kept += 1

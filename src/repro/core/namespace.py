@@ -19,17 +19,22 @@ from __future__ import annotations
 import heapq
 import os
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.cache import (
     CacheSpace, CacheEntry, EMPTY, VALID, DIRTY, INVALID,
 )
 from repro.core.callbacks import NotificationManager
 from repro.core.lease import LeaseManager
-from repro.core.oplog import MetaOpQueue, OpRecord
-from repro.core.replication import ReadSource, ReplicaSet
+from repro.core.oplog import (
+    MetaOpQueue, OpRecord, vts_dominates, vts_lww_key, vts_merge,
+)
+from repro.core.replication import (
+    ReadSource, ReplicaSet, WriteLeaseContended,
+)
 from repro.core.store import HomeStore, ObjectStat
 from repro.core.striping import StripedTransfer
+from repro.core.tasks import ConflictRecord
 from repro.core.transport import (
     DisconnectedError, Network, QuorumNotReachedError,
 )
@@ -116,6 +121,16 @@ class XufsClient:
         #: op seq -> modeled WAN seconds from apply start to the W-th ack
         #: (most recent ACK_WINDOW ops; insertion order = seq order)
         self.ack_wan_s: Dict[int, float] = {}
+        #: path -> causal frontier of this client's own stamped writes
+        #: (covers successive disconnected writes whose fan-out never
+        #: landed anywhere we can read the frontier back from)
+        self._vts_frontier: Dict[str, Dict[str, int]] = {}
+        #: concurrent-writer divergences this client's reconciles
+        #: detected (every one also forwarded to ``_conflict_sink``)
+        self.conflicts: List[ConflictRecord] = []
+        #: fabric wiring: scheduler.note_conflict when maintenance is on
+        self._conflict_sink: Optional[
+            Callable[[ConflictRecord], None]] = None
 
     ACK_WINDOW = 1024
 
@@ -155,6 +170,7 @@ class XufsClient:
             lm.local_locks = old_lm.local_locks
             lm.held = old_lm.held
             lm.at_risk = old_lm.at_risk | set(old_lm.held)
+            lm.pending_release = set(old_lm.pending_release)
         self.leases[prefix] = lm
         return m
 
@@ -207,7 +223,8 @@ class XufsClient:
                 # read's own latency is untouched.  On a capacity-bounded
                 # set this doubles as demand placement: the hot path is
                 # (re-)placed at replicas that never held it.
-                m.replicas.read_repair(self.name, path, data, st.version)
+                m.replicas.read_repair(self.name, path, data, st.version,
+                                       vts=store.vts_of(path) or None)
             return self.cache.store_data(path, data, st, state=VALID)
         if last_exc is not None:
             raise last_exc
@@ -349,8 +366,15 @@ class XufsClient:
         version); every surviving endpoint's ack is persisted in the oplog
         *before* the next endpoint is tried, so a flusher crash after W-1
         acks resumes with those acks in hand.  When home is unreachable
-        the flusher pins a client-assigned version and pushes directly to
-        replicas nearest-first until W acks are in.
+        the flusher takes the per-path write lease (when configured),
+        pins a client-assigned version, stamps the record with a vector
+        timestamp, and pushes directly to replicas nearest-first until W
+        acks are in.  Reconciling a pinned record back at home is
+        vts-aware: a causally-newer branch lands on top, a superseded one
+        retires quietly, and concurrent branches resolve by deterministic
+        last-writer-wins with the loser preserved in a
+        :class:`~repro.core.tasks.ConflictRecord` — never a silent
+        clobber.
         """
         reps = m.replicas
         home = m.server_name
@@ -358,23 +382,43 @@ class XufsClient:
         home_acked = home in acked
         version = rec.version
         t0 = self.network.clock
+        lease_owner = f"write:{self.owner}"
         if not home_acked:
             try:
                 self.transfer.send(self.name, home, data)
                 if version is None:
                     st = m.store.put(m.token, rec.path, data)
+                    # stamp the connected write's causal history: it
+                    # builds on whatever home held when it applied, so a
+                    # parked quorum branch that never saw it reconciles
+                    # as a detected conflict, not a blind overwrite
+                    vts = vts_merge(m.store.vts_of(rec.path),
+                                    self._vts_frontier.get(rec.path))
+                    vts[self.owner] = vts.get(self.owner, 0) + 1
+                    m.store.set_vts(rec.path, vts)
+                    rec.vts = dict(vts)
+                    self._vts_frontier[rec.path] = dict(vts)
                 else:                # replay/reconcile: idempotent re-apply
-                    st = m.store.apply_versioned(m.token, rec.path, data,
-                                                 version)
-                    if st.version > version:
-                        # Home is past our pinned version without having
-                        # seen these bytes (the catalog under-counted when
-                        # the quorum was assembled): the quorum ack
-                        # promised durability of THIS write, so it lands
-                        # on top.  (Two clients racing the same path in
-                        # one outage remain out of scope — ROADMAP.)
-                        st = m.store.put(m.token, rec.path, data,
-                                         version=st.version + 1)
+                    st, outcome = self._reconcile_pinned(m, rec, data,
+                                                         version)
+                    if outcome in ("superseded", "conflict-lost"):
+                        # home's causal history already covers (or beat)
+                        # this branch: retire the record WITHOUT fanning
+                        # its stale bytes out; replicas converge from
+                        # home via resync/repair
+                        self.oplog.mark_acked(rec, home,
+                                              version=st.version, home=True)
+                        if reps is not None \
+                                and reps.write_lease is not None:
+                            reps.release_write_lease(self.name, rec.path,
+                                                     lease_owner)
+                        cur = self.cache.lookup(rec.path)
+                        if cur is not None:
+                            self.cache.write_entry(CacheEntry(
+                                path=rec.path, state=INVALID, stat=st))
+                        self._note_ack(rec.seq,
+                                       self.network.clock - t0)
+                        return True
                 version = st.version
                 self.oplog.mark_acked(rec, home, version=version, home=True)
                 acked.add(home)
@@ -383,6 +427,11 @@ class XufsClient:
                 if cur is not None and cur.state == DIRTY:
                     self.cache.write_entry(CacheEntry(
                         path=rec.path, state=VALID, stat=st))
+                if reps is not None and reps.write_lease is not None:
+                    # the lease's job — no competing client-assigned
+                    # versions — ends once home holds the write
+                    reps.release_write_lease(self.name, rec.path,
+                                             lease_owner)
             except DisconnectedError:
                 pass     # home partitioned: try to assemble a replica quorum
         if reps is None:
@@ -396,7 +445,19 @@ class XufsClient:
             # fan-out stays best-effort, so a home outage stalls the drain.
             raise DisconnectedError(f"{home} unreachable (W=1 acks at home)")
         if version is None:
+            # first quorum attempt around a dead home: serialize via the
+            # write lease when one is configured, then pin version + vts
+            if reps.write_lease is not None:
+                if reps.acquire_write_lease(self.name, rec.path,
+                                            lease_owner) is False:
+                    raise WriteLeaseContended(
+                        f"{rec.path}: write lease held by another writer")
             version = reps.next_version(rec.path)
+            vts = vts_merge(reps.vts_frontier(self.name, rec.path),
+                            self._vts_frontier.get(rec.path))
+            vts[self.owner] = vts.get(self.owner, 0) + 1
+            rec.vts = vts           # persisted with the first replica ack
+            self._vts_frontier[rec.path] = dict(vts)
         quorum_clock: Optional[float] = None
         if len(acked) >= w:
             quorum_clock = self.network.clock
@@ -410,11 +471,17 @@ class XufsClient:
         # depth + NIC backlog included), so the W-th ack lands as early
         # as the current congestion state allows
         src = reps.home_name if home_acked else self.name
+        # replicas receive the authoritative frontier once home acked
+        # (reconcile may have merged branches there); otherwise the
+        # record's own stamp rides the fan-out
+        fan_vts = (m.store.vts_of(rec.path) or None) if home_acked \
+            else rec.vts
         launched = []
         for name in reps.replicas_by_cost(src, len(data)):
             if name in acked:
                 continue
-            p = reps.begin_apply(name, rec.path, data, version, src=src)
+            p = reps.begin_apply(name, rec.path, data, version, src=src,
+                                 vts=fan_vts)
             if p is not None:
                 launched.append(p)
         # acks pop in completion order (heap, launch order on ties) —
@@ -442,6 +509,89 @@ class XufsClient:
             reps.catalog.note_quorum(rec.path, version)
             return False
         return True
+
+    def _reconcile_pinned(self, m: Mount, rec: OpRecord, data: bytes,
+                          version: int) -> Tuple[ObjectStat, str]:
+        """Land a version-pinned record back at home (replay/reconcile),
+        vts-aware.  Returns ``(home stat, outcome)`` with outcome one of
+        ``"apply"`` / ``"superseded"`` / ``"conflict-won"`` /
+        ``"conflict-lost"``.
+
+        Legacy records (no stamp — pre-vts WAL lines) keep the
+        historical blind put-on-top.  Stamped records compare causal
+        histories first: a branch home already includes retires quietly;
+        a branch that includes home's state lands on top; two branches
+        that know nothing of each other are a true conflict — resolved
+        by the deterministic last-writer-wins order (``vts_lww_key``)
+        and preserved, both sides, in a :class:`ConflictRecord`.
+        """
+        if rec.vts is None:
+            st = m.store.apply_versioned(m.token, rec.path, data, version)
+            if st.version > version:
+                # Home is past our pinned version without having seen
+                # these bytes (the catalog under-counted when the quorum
+                # was assembled): the quorum ack promised durability of
+                # THIS write, so it lands on top.
+                st = m.store.put(m.token, rec.path, data,
+                                 version=st.version + 1)
+            return st, "apply"
+        home_vts = m.store.vts_of(rec.path)
+        rvts = dict(rec.vts)
+        if vts_dominates(home_vts, rvts):
+            # our write is already in home's causal past: a duplicate
+            # reconcile, or a later writer built on our branch (it
+            # merged our frontier from a common replica) and landed
+            # first — either way, re-applying would roll home back
+            st = m.store.stat(m.token, rec.path)
+            if st is None:        # deleted at home after superseding us
+                st = ObjectStat(path=rec.path, size=0, version=version,
+                                mtime=self.network.clock)
+            return st, "superseded"
+        if vts_dominates(rvts, home_vts):
+            st = m.store.apply_versioned(m.token, rec.path, data, version)
+            if st.version > version:
+                st = m.store.put(m.token, rec.path, data,
+                                 version=st.version + 1)
+            m.store.set_vts(rec.path, rvts)
+            return st, "apply"
+        # concurrent branches: neither knows about the other.  Land the
+        # deterministic LWW winner's bytes at a version past BOTH
+        # branches — even when home's current bytes win, the version
+        # bump makes home the freshness floor again, so replicas still
+        # holding the losing branch get repaired instead of serving it.
+        theirs_data, cur = m.store.get(m.token, rec.path)
+        merged = vts_merge(rvts, home_vts)
+        ours_win = vts_lww_key(rvts) > vts_lww_key(home_vts)
+        st = m.store.put(m.token, rec.path,
+                         data if ours_win else theirs_data,
+                         version=max(cur.version, version) + 1)
+        m.store.set_vts(rec.path, merged)
+        self._note_conflict(ConflictRecord(
+            path=rec.path, seq=rec.seq, owner=self.owner,
+            ours_vts=rvts, theirs_vts=dict(home_vts),
+            winner="ours" if ours_win else "theirs",
+            ours_data=data, theirs_data=theirs_data,
+            detected_at=self.network.clock,
+            _apply=self._conflict_override_fn(m, rec.path, merged)))
+        return st, ("conflict-won" if ours_win else "conflict-lost")
+
+    def _note_conflict(self, record: ConflictRecord) -> None:
+        self.conflicts.append(record)
+        if self._conflict_sink is not None:
+            self._conflict_sink(record)
+
+    def _conflict_override_fn(self, m: Mount, path: str,
+                              merged: Dict[str, int]
+                              ) -> Callable[[bytes], None]:
+        """Bound apply for ``ConflictRecord.resolve()``: re-lands the
+        operator's chosen branch on top at home (a real wire write)."""
+        def apply_override(data: bytes) -> None:
+            self.transfer.send(self.name, m.server_name, data)
+            st = m.store.stat_unchecked(path)
+            m.store.put(m.token, path, data,
+                        version=(st.version + 1) if st is not None else 1)
+            m.store.set_vts(path, dict(merged))
+        return apply_override
 
     def _apply_delete(self, m: Mount, rec: OpRecord) -> bool:
         """Deletes stay home-first: the authoritative tombstone must land

@@ -27,7 +27,7 @@ from __future__ import annotations
 import json
 import os
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.transport import DisconnectedError
 
@@ -40,6 +40,50 @@ DONE = "done"
 FLUSHABLE = (PENDING, APPLIED_HOME)
 
 
+# ---- vector-timestamp algebra ------------------------------------------
+# A vts maps writer name -> logical clock.  It rides OpRecord and the
+# stores' per-path frontier so concurrent branches written around a dead
+# home are detectable at reconcile time instead of silently clobbering.
+
+def vts_merge(a: Optional[Dict[str, int]],
+              b: Optional[Dict[str, int]]) -> Dict[str, int]:
+    """Pointwise max — the least upper bound of two causal histories."""
+    out = dict(a) if a else {}
+    if b:
+        for k, v in b.items():
+            if v > out.get(k, 0):
+                out[k] = v
+    return out
+
+
+def vts_dominates(a: Optional[Dict[str, int]],
+                  b: Optional[Dict[str, int]]) -> bool:
+    """True when ``a``'s history includes all of ``b``'s (``a >= b``
+    pointwise; equality dominates).  Everything dominates the empty
+    (pre-vts / legacy) stamp."""
+    if not b:
+        return True
+    if not a:
+        return False
+    return all(a.get(k, 0) >= v for k, v in b.items())
+
+
+def vts_concurrent(a: Optional[Dict[str, int]],
+                   b: Optional[Dict[str, int]]) -> bool:
+    """Neither branch knows about the other — a true conflict."""
+    return not vts_dominates(a, b) and not vts_dominates(b, a)
+
+
+def vts_lww_key(vts: Optional[Dict[str, int]]) -> Tuple:
+    """Deterministic total order for last-writer-wins tie-breaking of
+    concurrent branches: more total causal events wins, then the
+    lexicographically greatest sorted (writer, clock) sequence.  Two
+    concurrent branches can never compare equal (equal sums + equal
+    sorted items would be the same dict)."""
+    v = vts or {}
+    return (sum(v.values()), tuple(sorted(v.items())))
+
+
 @dataclass
 class OpRecord:
     seq: int
@@ -49,11 +93,15 @@ class OpRecord:
     status: str = PENDING
     acked: List[str] = field(default_factory=list)  # endpoints that confirmed
     version: Optional[int] = None        # version pinned at first apply
+    #: vector timestamp stamped at first apply (None on legacy records:
+    #: reconcile then keeps the historical blind put-on-top behavior)
+    vts: Optional[Dict[str, int]] = None
 
     def to_json(self) -> Dict:
         return {"seq": self.seq, "op": self.op, "path": self.path,
                 "payload_file": self.payload_file, "status": self.status,
-                "acked": self.acked, "version": self.version}
+                "acked": self.acked, "version": self.version,
+                "vts": self.vts}
 
     @classmethod
     def from_json(cls, d: Dict) -> "OpRecord":

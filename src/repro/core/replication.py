@@ -32,11 +32,20 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple, Union
 
+from repro.core.oplog import vts_merge
 from repro.core.store import HomeStore, ObjectStat
 from repro.core.striping import StripedTransfer, TransferGroup
 from repro.core.transport import (
     AuthError, DisconnectedError, Network, Transfer, respond,
 )
+
+
+class WriteLeaseContended(DisconnectedError):
+    """Another writer holds the per-path write lease on a common
+    replica.  Subclasses :class:`DisconnectedError` on purpose: the
+    flusher treats it like a WAN fault — the drain stops, the op stays
+    queued, and the next pump retries (by which time the holder has
+    reconciled or its short TTL lapsed)."""
 
 #: A read source the client can try: (endpoint name, store, auth token).
 ReadSource = Tuple[str, HomeStore, str]
@@ -56,6 +65,33 @@ ROUTE_PROBE_BYTES = 1024 * 1024
 
 #: Shared empty result for directories the catalog knows nothing under.
 _NO_PATHS: Set[str] = frozenset()   # type: ignore[assignment]
+
+
+@dataclass(frozen=True)
+class WriteLeaseSpec:
+    """Per-path write leases over the replica set for quorum writes
+    around a dead home.
+
+    Before assigning a client-side version, the flusher must hold a
+    short-TTL lease on **every** replica it can reach (owner
+    ``write:<user>``, the PR 6 owner-prefix pattern) — so two sessions
+    writing one path during the same outage serialize whenever any
+    common replica is reachable: the second writer's drain defers
+    (:class:`WriteLeaseContended`) and retries after the first
+    reconciles or the TTL lapses, by which point it observes the first
+    write's vector timestamp and lands causally *after* it instead of
+    concurrently.  Under a full partition (no replica reachable) writes
+    fall back to vector-timestamp tagging and conflict detection at
+    reconcile.  Unset (``ReplicaPolicy.write_lease=None``) keeps the
+    write path lease-free and every trace bit-identical.
+    """
+
+    ttl_s: float = 10.0
+
+    def __post_init__(self) -> None:
+        if self.ttl_s <= 0:
+            raise ValueError(
+                f"WriteLeaseSpec.ttl_s must be > 0: {self.ttl_s}")
 
 
 @dataclass(frozen=True)
@@ -271,6 +307,8 @@ class PendingApply:
     src: str
     group: TransferGroup
     ack: Transfer
+    #: vector timestamp riding the apply (None on legacy/untagged paths)
+    vts: Optional[Dict[str, int]] = None
 
 
 class ReplicaSet:
@@ -281,7 +319,8 @@ class ReplicaSet:
                  write_quorum: WritePolicy = 1,
                  queue_aware: bool = True,
                  capacity_bytes: Optional[int] = None,
-                 eviction: Optional[EvictionSpec] = None):
+                 eviction: Optional[EvictionSpec] = None,
+                 write_lease: Optional[WriteLeaseSpec] = None):
         if capacity_bytes is not None:
             # deprecated alias (the PR 5 seam): assembles the structured
             # spec — ReplicaPolicy warns; this low-level path stays quiet
@@ -314,9 +353,15 @@ class ReplicaSet:
         self.replicas: Dict[str, Replica] = {}
         self.catalog = ReplicaCatalog()
         self.transfer = StripedTransfer(network)
+        #: Per-path write leases for quorum writes (None = lease-free,
+        #: vector timestamps alone catch divergence at reconcile).
+        self.write_lease = write_lease
         self.fanout_ok = 0
         self.fanout_deferred = 0
         self.read_repairs = 0
+        self.lease_acquired = 0
+        self.lease_contended = 0
+        self.lease_unavailable = 0
         #: applies refused because they would overflow a bounded replica
         self.admission_refused = 0
         #: evictions across every replica (per-replica count on Replica)
@@ -453,6 +498,86 @@ class ReplicaSet:
             if v is not None and v > best:
                 best = v
         return best + 1
+
+    # ---- concurrent-writer safety ---------------------------------------
+    def vts_frontier(self, client_name: str, path: str) -> Dict[str, int]:
+        """Merged vector-timestamp frontier of every replica reachable
+        from ``client_name``.  The frontier piggy-backs on the fan-out
+        messages the flusher sends anyway, so reading it is wire-free;
+        merging it into a new write's stamp is what orders that write
+        *after* everything a common replica has already acked."""
+        out: Dict[str, int] = {}
+        for name, rep in self.replicas.items():
+            if self.network.is_partitioned(client_name, name):
+                continue
+            out = vts_merge(out, rep.store.vts_of(path))
+        return out
+
+    def acquire_write_lease(self, client_name: str, path: str,
+                            owner: str) -> Optional[bool]:
+        """Take the per-path write lease on every reachable replica.
+
+        Returns ``True`` when all reachable replicas granted (same-owner
+        re-acquire extends — a resumed flush attempt keeps its lease),
+        ``False`` when another writer holds it somewhere (partial grants
+        are rolled back; the caller defers), and ``None`` when no
+        replica is reachable at all — a full partition, where the lease
+        cannot serialize anything and vector timestamps are the safety
+        net.  Each grant and rollback is a real lease RPC on the clock.
+        """
+        spec = self.write_lease
+        if spec is None:
+            return None
+        reachable = [n for n in self.replicas
+                     if not self.network.is_partitioned(client_name, n)]
+        if not reachable:
+            self.lease_unavailable += 1
+            return None
+        granted: List[str] = []
+        for name in reachable:
+            rep = self.replicas[name]
+            try:
+                self.network.rpc(client_name, name, "write_lease")
+            except DisconnectedError:
+                continue          # flapped mid-acquire: treat as absent
+            if rep.store.acquire_lock(rep.token, path, owner,
+                                      spec.ttl_s, self.network.clock):
+                granted.append(name)
+                continue
+            # contended: another writer got there first on a common
+            # replica — roll back partial grants and defer
+            for g in granted:
+                grep = self.replicas[g]
+                try:
+                    self.network.rpc(client_name, g, "write_lease_release")
+                except DisconnectedError:
+                    pass          # its short TTL is the fallback
+                grep.store.release_lock(grep.token, path, owner)
+            self.lease_contended += 1
+            return False
+        if not granted:
+            self.lease_unavailable += 1
+            return None
+        self.lease_acquired += 1
+        return True
+
+    def release_write_lease(self, client_name: str, path: str,
+                            owner: str) -> int:
+        """Best-effort release of a held write lease (called once the
+        write lands at home).  A replica that cannot be reached keeps
+        the lock until its TTL lapses — crash-safe by construction."""
+        released = 0
+        now = self.network.clock
+        for name, rep in self.replicas.items():
+            if rep.store.lock_owner(path, now) != owner:
+                continue
+            try:
+                self.network.rpc(client_name, name, "write_lease_release")
+            except DisconnectedError:
+                continue          # TTL expiry is the fallback
+            rep.store.release_lock(rep.token, path, owner)
+            released += 1
+        return released
 
     def _route_cost(self, src: str, dst: str, nbytes: int) -> float:
         """What one routing candidate costs right now: estimated
@@ -617,8 +742,9 @@ class ReplicaSet:
 
     # ---- write-back fan-out ---------------------------------------------
     def begin_apply(self, name: str, path: str, data: bytes,
-                    version: int,
-                    src: Optional[str] = None) -> Optional[PendingApply]:
+                    version: int, src: Optional[str] = None,
+                    vts: Optional[Dict[str, int]] = None
+                    ) -> Optional[PendingApply]:
         """Launch one replica apply as overlapped channel reservations.
 
         ``src`` is the endpoint driving the apply: home during ordinary
@@ -653,7 +779,8 @@ class ReplicaSet:
             self.fanout_deferred += 1
             return None
         return PendingApply(name=name, path=path, data=data,
-                            version=version, src=src, group=group, ack=ack)
+                            version=version, src=src, group=group, ack=ack,
+                            vts=vts)
 
     def complete_apply(self, p: PendingApply) -> None:
         """Land one in-flight apply: real bytes into the replica store,
@@ -661,16 +788,19 @@ class ReplicaSet:
         caller decides whether this ack is on the critical path."""
         rep = self.replicas[p.name]
         rep.store.put(rep.token, p.path, p.data, version=p.version)
+        if p.vts is not None:
+            rep.store.set_vts(p.path, p.vts)
         self.catalog.record(p.path, p.name, p.version)
         rep.lagging.discard(p.path)
         self._account_put(p.name, p.path, len(p.data))
         self.fanout_ok += 1
 
     def apply_to_replica(self, name: str, path: str, data: bytes,
-                         version: int, src: Optional[str] = None) -> bool:
+                         version: int, src: Optional[str] = None,
+                         vts: Optional[Dict[str, int]] = None) -> bool:
         """Blocking apply (anti-entropy repair path): launch, wait the
         ack onto the clock, land the bytes."""
-        p = self.begin_apply(name, path, data, version, src=src)
+        p = self.begin_apply(name, path, data, version, src=src, vts=vts)
         if p is None:
             return False
         self.network.wait(p.ack)
@@ -679,7 +809,8 @@ class ReplicaSet:
 
     # ---- read repair -----------------------------------------------------
     def read_repair(self, client_name: str, path: str, data: bytes,
-                    version: int) -> int:
+                    version: int,
+                    vts: Optional[Dict[str, int]] = None) -> int:
         """Push freshly-read bytes to replicas observed stale, off the
         reader's critical path.
 
@@ -706,7 +837,8 @@ class ReplicaSet:
             # on a capacity-bounded replica the read reaching this point
             # IS the placement signal: the path is hot, so read repair
             # doubles as demand placement (admission still gates it)
-            p = self.begin_apply(name, path, data, version, src=client_name)
+            p = self.begin_apply(name, path, data, version,
+                                 src=client_name, vts=vts)
             if p is None:
                 continue          # still partitioned: stays lagging
             self.complete_apply(p)
@@ -793,7 +925,9 @@ class ReplicaSet:
                             rep.lagging.discard(path)
                             continue
                 data, st = blob
-                if self.apply_to_replica(rep.name, path, data, st.version):
+                if self.apply_to_replica(
+                        rep.name, path, data, st.version,
+                        vts=self.home_store.vts_of(path) or None):
                     repaired += 1
         for rep in self.replicas.values():
             # drop objects deleted at home (a parked quorum write that home
@@ -859,7 +993,8 @@ class ReplicaSet:
                 continue
             if path not in rep.lagging and held is None:
                 continue      # never placed here: placement, not repair
-            p = self.begin_apply(name, path, data, st.version)
+            p = self.begin_apply(name, path, data, st.version,
+                                 vts=self.home_store.vts_of(path) or None)
             if p is not None:
                 pending.append(p)
         return pending

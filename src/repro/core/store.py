@@ -53,6 +53,10 @@ class HomeStore:
         self._subscribers: List[Callable[[str, ObjectStat], None]] = []
         self._authed_tokens: set = set()
         self._locks: Dict[str, Tuple[str, float]] = {}  # path -> (owner, expiry)
+        # path -> vector timestamp (writer -> logical clock): the causal
+        # frontier of the bytes this store holds.  Rides existing data
+        # messages, so it never costs wire traffic of its own.
+        self._vts: Dict[str, Dict[str, int]] = {}
 
     # ---- auth (USSH <key,phrase> challenge, paper §3.2) ----------------
     def authenticate(self, respond_fn: Callable[[str], str]) -> str:
@@ -136,8 +140,18 @@ class HomeStore:
         with open(mp) as f:
             return ObjectStat.from_json(json.load(f))
 
+    def vts_of(self, path: str) -> Dict[str, int]:
+        """Vector timestamp of the blob at ``path`` (empty for paths
+        written before vts tracking or by direct legacy puts)."""
+        v = self._vts.get(path)
+        return dict(v) if v else {}
+
+    def set_vts(self, path: str, vts: Dict[str, int]) -> None:
+        self._vts[path] = dict(vts)
+
     def delete(self, token: str, path: str) -> None:
         self.check(token)
+        self._vts.pop(path, None)
         for p in (self._dpath(path), self._mpath(path)):
             if os.path.exists(p):
                 os.remove(p)

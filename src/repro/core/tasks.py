@@ -125,6 +125,46 @@ class DeadLetter:
 
 
 @dataclass
+class ConflictRecord:
+    """One detected concurrent-writer divergence (sibling of
+    :class:`DeadLetter`): two vector-timestamp branches of the same path
+    that neither dominates the other.  Reconciliation auto-picks a
+    deterministic last-writer-wins ``winner`` and lands its bytes at
+    home, but the losing branch is preserved here — a true conflict is
+    never silently clobbered.  ``resolve()`` lets an operator override
+    the automatic pick by re-applying either branch on top."""
+
+    path: str
+    seq: int                         # oplog seq of the detecting record
+    owner: str                       # writer whose reconcile detected it
+    ours_vts: Dict[str, int]         # the reconciling record's stamp
+    theirs_vts: Dict[str, int]       # home's frontier at detection
+    winner: str                      # "ours" | "theirs" (LWW auto-pick)
+    ours_data: bytes
+    theirs_data: bytes
+    detected_at: float
+    resolved: bool = False
+    resolution: Optional[str] = None
+    _apply: Optional[Callable[[bytes], None]] = field(
+        default=None, repr=False, compare=False)
+
+    def resolve(self, keep: str) -> None:
+        """Operator override: re-apply the chosen branch (``"ours"`` or
+        ``"theirs"``) on top at home.  One-shot."""
+        if keep not in ("ours", "theirs"):
+            raise ValueError(f'resolve() takes "ours" or "theirs": {keep!r}')
+        if self.resolved:
+            raise RuntimeError(
+                f"conflict on {self.path!r} already resolved "
+                f"({self.resolution})")
+        if self._apply is not None:
+            self._apply(self.ours_data if keep == "ours"
+                        else self.theirs_data)
+        self.resolved = True
+        self.resolution = keep
+
+
+@dataclass
 class ScheduledTask:
     """One periodic schedule entry.  ``fn`` returning normally is
     success; raising is a failure that enters the retry/backoff ladder.
@@ -198,10 +238,12 @@ class MaintenanceReport:
     repairs: int
     double_repairs: int
     evictions: int
+    conflicts: int
     inflight: int
     #: task name -> {owner, runs, failures, attempt, next_due, dead}
     tasks: Dict[str, Dict[str, object]]
     dead_letters: Tuple[DeadLetter, ...]
+    conflict_records: Tuple[ConflictRecord, ...]
 
 
 class MaintenanceScheduler:
@@ -232,6 +274,11 @@ class MaintenanceScheduler:
         self.repairs = 0
         self.double_repairs = 0
         self.evictions = 0
+        # concurrent-writer divergences surfaced by client reconciles
+        self.conflicts: List[ConflictRecord] = []
+        # armed FaultInjector (see Fabric.arm_faults): run_until walks
+        # the clock to scheduled fault times even when no task is due
+        self.faults: Optional[object] = None
         # repairs launched but not yet acked: (replica set, pending apply)
         self._inflight: List[Tuple["ReplicaSet", "PendingApply"]] = []
         self._tick_seq = 0
@@ -285,6 +332,12 @@ class MaintenanceScheduler:
         self._repair_marks[path_key] = (self._tick_seq, owner)
         self.repairs += 1
 
+    def note_conflict(self, record: ConflictRecord) -> None:
+        """Adopt a concurrent-writer conflict detected by a client's
+        reconcile (wired up by the fabric) so it surfaces in
+        :meth:`report` next to the dead letters."""
+        self.conflicts.append(record)
+
     def track(self, rset: "ReplicaSet",
               pending: List["PendingApply"]) -> None:
         """Adopt launched-but-unacked repair applies; they land (bytes
@@ -324,13 +377,19 @@ class MaintenanceScheduler:
         due or an in-flight repair ack landing."""
         times = [t.next_due for t in self.tasks.values() if not t.dead]
         times += [p.ack.completion for _, p in self._inflight]
+        if self.faults is not None:
+            nxt = self.faults.next_at()
+            if nxt is not None:
+                times.append(nxt)
         return min(times) if times else None
 
     def tick(self) -> int:
         """Run every task due at the current clock (registration order —
-        deterministic), landing matured repair acks first.  Returns how
-        many tasks ran."""
+        deterministic), firing due fault-plan events and landing matured
+        repair acks first.  Returns how many tasks ran."""
         self._tick_seq += 1
+        if self.faults is not None:
+            self.faults.advance_to(self.network.clock)
         self._settle_inflight()
         ran = 0
         now = self.network.clock
@@ -430,10 +489,12 @@ class MaintenanceScheduler:
             repairs=self.repairs,
             double_repairs=self.double_repairs,
             evictions=self.evictions,
+            conflicts=len(self.conflicts),
             inflight=len(self._inflight),
             tasks={t.name: {
                 "owner": t.owner, "runs": t.runs,
                 "failures": t.failures, "attempt": t.attempt,
                 "next_due": t.next_due, "dead": t.dead,
             } for t in self.tasks.values()},
-            dead_letters=tuple(self.dead_letters))
+            dead_letters=tuple(self.dead_letters),
+            conflict_records=tuple(self.conflicts))

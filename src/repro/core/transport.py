@@ -254,6 +254,9 @@ class Network:
     nic_budgets: Dict[str, float] = field(default_factory=dict)
     _nic_free: Dict[str, float] = field(default_factory=dict)
     trace: List[Tuple] = field(default_factory=list)
+    # armed FaultInjector (repro.core.faults), pumped lazily before any
+    # partition-sensitive operation; None => zero-cost no-op
+    _faults: Optional[Any] = None
 
     def __post_init__(self) -> None:
         w = max(int(self.channels_per_pair), 1)
@@ -476,6 +479,8 @@ class Network:
         """Push the clock forward unconditionally (lease-expiry tests and
         workload idle time; data movement should reserve channels)."""
         self.clock += max(seconds, 0.0)
+        if self._faults is not None:
+            self._faults.advance_to(self.clock)
 
     def wait(self, t: Transfer) -> float:
         """Block on one transfer: clock lands at its completion (no-op if
@@ -557,14 +562,36 @@ class Network:
         return [t for _seq, _i, t in live]
 
     # ---- failures --------------------------------------------------------
-    def partition(self, a: str, b: str, duration: float = float("inf")):
-        key = (min(a, b), max(a, b))
-        self._partitions[key] = self.clock + duration
+    def arm_faults(self, injector: Any) -> None:
+        """Attach a :class:`repro.core.faults.FaultInjector`.  Scheduled
+        events fire lazily: any partition-sensitive operation (and
+        :meth:`advance`) first releases every event whose time the clock
+        has reached.  Pass ``None`` to disarm."""
+        self._faults = injector
+
+    def _pump_faults(self) -> None:
+        f = self._faults
+        if f is not None:
+            f.advance_to(self.clock)
+
+    def partition(self, a: str, b: str, duration: float = float("inf"),
+                  *, start: Optional[float] = None):
+        """Cut the ``a <-> b`` link.  ``start`` anchors the outage window
+        at an earlier virtual time (fault plans fire lazily, so the
+        window must not depend on when the pump happened to run); a
+        window already fully in the past is a no-op."""
+        t0 = self.clock if start is None else start
+        until = t0 + duration
+        if until <= self.clock:
+            return
+        self._partitions[(min(a, b), max(a, b))] = until
 
     def heal(self, a: str, b: str) -> None:
         self._partitions.pop((min(a, b), max(a, b)), None)
 
     def is_partitioned(self, a: str, b: str) -> bool:
+        if self._faults is not None:
+            self._faults.advance_to(self.clock)
         key = (min(a, b), max(a, b))
         until = self._partitions.get(key)
         if until is None:
@@ -686,6 +713,8 @@ class Network:
                     touched = True
             if touched:
                 est = np.array(est_l)
+        if self._faults is not None:
+            self._faults.advance_to(self.clock)
         if self._partitions:
             for i in range(n):
                 if self.is_partitioned(srcs[i], dsts[i]):
@@ -705,6 +734,8 @@ class Network:
         (an ack cannot start before its data lands).  The caller later
         advances the clock via ``wait``/``wait_all``/``drain``.
         """
+        if self._faults is not None:
+            self._faults.advance_to(self.clock)
         if self._partitions and self.is_partitioned(src, dst):
             raise DisconnectedError(f"{src} <-> {dst} partitioned")
         key = (src, dst) if src <= dst else (dst, src)
@@ -817,6 +848,8 @@ class Network:
                 encs.append(r[5] if lr > 5 else False)
                 nbefs.append(r[6] if lr > 6 else 0.0)
         sequential = False
+        if self._faults is not None:
+            self._faults.advance_to(self.clock)
         if self._partitions:
             for src, dst in zip(srcs, dsts):
                 if self.is_partitioned(src, dst):

@@ -1,0 +1,128 @@
+"""Randomized chaos property test: two writers hammer one path while a
+seeded :class:`FaultPlan` cuts links at random; after the chaos horizon
+passes and both writers drain + reconcile, the fabric must have
+converged — no parked or pending work, home holding exactly one written
+payload, replicas matching home, and every surviving conflict preserving
+both branches.  Same seed ⇒ bit-identical wire trace.
+
+Runs under real hypothesis when installed, else the deterministic
+``_propcheck`` shim (``pytest --seed N`` reruns a failure).
+"""
+import shutil
+import tempfile
+
+from _propcheck import given, settings, strategies as st
+
+from repro.core import (
+    Fabric, FabricSpec, FaultPlan, LinkModel, MountSpec, ReplicaPolicy,
+    SiteSpec, WriteLeaseSpec,
+)
+from repro.core.oplog import vts_dominates
+
+HOME_LATENCY = 0.060
+PATH = "home/shared/chaos.bin"
+PAIRS = (("site", "home"), ("site2", "home"),
+         ("home", "r1"), ("home", "r2"))
+ROUNDS = 4
+HORIZON_S = 50.0
+
+
+def _run(root, seed, lease):
+    spec = FabricSpec.star(
+        f"{root}/home", f"{root}/site",
+        replica_latencies={"r1": 0.005, "r2": 0.015},
+        link=LinkModel(latency_s=HOME_LATENCY),
+        extra_sites=(SiteSpec("site2", root=f"{root}/site2"),))
+    fab = Fabric(spec)
+    s = fab.login("sci", replicas=ReplicaPolicy(
+        sites=("r1", "r2"), write_quorum="majority",
+        write_lease=WriteLeaseSpec(ttl_s=10.0) if lease else None))
+    bob = fab.attach(s, "site2", owner="bob", mounts=[MountSpec("home/")])
+    net = s.network
+    t0 = net.clock
+    fab.arm_faults(FaultPlan.chaos(PAIRS, seed=seed, horizon_s=HORIZON_S,
+                                   events=6, start_s=t0))
+    writers = ((s.client, "sci"), (bob, "bob"))
+    payloads = set()
+    for rnd in range(ROUNDS):
+        for client, owner in writers:
+            data = f"{owner}:{rnd}:".encode() * 997
+            payloads.add(data)
+            with client.open(PATH, "w") as f:
+                f.write(data)
+            client.pump()         # may park, defer, or land — all fine
+        net.advance(HORIZON_S / ROUNDS)
+        for client, _ in writers:
+            client.pump()
+            client.reconcile()
+    # past the horizon every chaos window has lapsed (all are finite);
+    # drain until the whole fabric is quiet
+    net.advance(max(0.0, t0 + HORIZON_S - net.clock) + 15.0)
+    for _ in range(3):
+        for client, _ in writers:
+            client.pump()
+            client.reconcile()
+    s.replicas.resync()
+    home_data, home_st = s.server.store.get(s.token, PATH)
+    return {
+        "trace": tuple(net.trace),
+        "home_data": home_data,
+        "home_version": home_st.version,
+        "home_vts": s.server.store.vts_of(PATH),
+        "replicas": {name: (rep.store.get(rep.token, PATH)[0],
+                            rep.store.vts_of(PATH))
+                     for name, rep in s.replicas.replicas.items()},
+        "payloads": payloads,
+        "pending": [r.path for c, _ in writers for r in c.oplog.pending()],
+        "parked": [r.path for c, _ in writers
+                   for r in c.oplog.unreconciled()],
+        "conflicts": [c for cl, _ in writers for c in cl.conflicts],
+    }
+
+
+def _check_invariants(out):
+    # 1. nothing left queued or parked anywhere
+    assert out["pending"] == [], f"undrained ops: {out['pending']}"
+    assert out["parked"] == [], f"unreconciled ops: {out['parked']}"
+    # 2. home holds exactly one of the payloads that was actually written
+    assert out["home_data"] in out["payloads"]
+    # 3. replicas converge to home's bytes and home's frontier dominates
+    for name, (data, vts) in out["replicas"].items():
+        assert data == out["home_data"], f"{name} diverged from home"
+        assert vts_dominates(out["home_vts"], vts), \
+            f"{name} frontier {vts} escapes home {out['home_vts']}"
+    # 4. a detected conflict preserves BOTH branches verbatim
+    for c in out["conflicts"]:
+        assert c.ours_data in out["payloads"]
+        assert c.theirs_data in out["payloads"]
+        assert c.ours_vts and c.theirs_vts
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 20),
+       st.booleans())
+def test_chaos_converges_and_loses_nothing(seed, lease):
+    root = tempfile.mkdtemp(prefix="chaos_")
+    try:
+        _check_invariants(_run(root, seed, lease))
+    finally:
+        shutil.rmtree(root, ignore_errors=True)
+
+
+@settings(max_examples=3, deadline=None)
+@given(st.integers(min_value=0, max_value=2 ** 20))
+def test_same_seed_same_trace(seed):
+    """The whole run — workload + chaos — is a pure function of the
+    seed: two fresh universes produce bit-identical wire traces and the
+    same resolved state."""
+    roots = [tempfile.mkdtemp(prefix="chaos_det_") for _ in range(2)]
+    try:
+        a = _run(roots[0], seed, lease=False)
+        b = _run(roots[1], seed, lease=False)
+        assert a["trace"] == b["trace"]
+        assert a["home_data"] == b["home_data"]
+        assert a["home_vts"] == b["home_vts"]
+        assert a["home_version"] == b["home_version"]
+    finally:
+        for r in roots:
+            shutil.rmtree(r, ignore_errors=True)

@@ -1,0 +1,319 @@
+"""Concurrent-writer safety: vector-timestamp algebra, vts persistence
+in the WAL, write leases over the replica set, conflict detection with
+deterministic last-writer-wins, and the ConflictRecord lifecycle.
+
+The two-writer scenarios build real concurrency through the fabric:
+``login`` + ``attach`` share one home store and one replica set, so two
+sessions writing the same path around a home outage produce branches
+that are *semantically* concurrent even though their version numbers
+never collide.
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core import (
+    ConflictRecord, Fabric, FabricSpec, LinkModel, MaintenanceSpec,
+    MetaOpQueue, MountSpec, ReplicaPolicy, SiteSpec, WriteLeaseSpec,
+)
+from repro.core.oplog import (
+    OpRecord, vts_concurrent, vts_dominates, vts_lww_key, vts_merge,
+)
+
+HOME_LATENCY = 0.060
+
+
+# ---- vts algebra ------------------------------------------------------------
+
+def test_vts_merge_is_pointwise_max():
+    assert vts_merge({"a": 2, "b": 1}, {"b": 3, "c": 1}) == \
+        {"a": 2, "b": 3, "c": 1}
+    assert vts_merge(None, {"a": 1}) == {"a": 1}
+    assert vts_merge({}, None) == {}
+
+
+def test_vts_dominates_and_concurrent():
+    assert vts_dominates({"a": 2, "b": 1}, {"a": 1})
+    assert vts_dominates({"a": 1}, {"a": 1})            # equality dominates
+    assert not vts_dominates({"a": 1}, {"a": 2})
+    assert vts_dominates({"a": 1}, {})                  # empty/legacy
+    assert vts_dominates({}, None)
+    assert not vts_dominates({}, {"a": 1})
+    assert vts_concurrent({"a": 1}, {"b": 1})
+    assert not vts_concurrent({"a": 2, "b": 1}, {"a": 1})
+
+
+def test_vts_lww_key_totally_orders_concurrent_branches():
+    # more causal events wins first...
+    assert vts_lww_key({"a": 1, "b": 1}) > vts_lww_key({"c": 1})
+    # ...then the lexicographically greatest writer set breaks the tie
+    assert vts_lww_key({"sci": 1}) > vts_lww_key({"bob": 1})
+    # two concurrent branches can never compare equal: equal sums AND
+    # equal sorted items would make them the same dict
+    assert vts_lww_key({"a": 2}) != vts_lww_key({"b": 2})
+
+
+# ---- WAL persistence --------------------------------------------------------
+
+def test_vts_rides_the_wal_and_survives_recovery(tmp_path):
+    q = MetaOpQueue(str(tmp_path / "oplog"))
+    rec = q.append("store", "home/x", b"data")
+    rec.vts = {"sci": 3, "bob": 1}
+    q.mark_acked(rec, "r1", version=7)
+    [back] = MetaOpQueue(str(tmp_path / "oplog")).scan()
+    assert back.vts == {"sci": 3, "bob": 1}
+    assert back.version == 7 and back.acked == ["r1"]
+
+
+def test_legacy_wal_lines_without_vts_load_as_none(tmp_path):
+    root = tmp_path / "oplog"
+    q = MetaOpQueue(str(root))
+    # a WAL line written before vts existed has no such key at all
+    legacy = {"seq": 1, "op": "store", "path": "home/old",
+              "payload_file": None, "status": "pending", "acked": [],
+              "version": None}
+    with open(q.wal_path, "a") as f:
+        f.write(json.dumps(legacy) + "\n")
+    [back] = MetaOpQueue(str(root)).scan()
+    assert back.vts is None
+
+
+# ---- ConflictRecord lifecycle ----------------------------------------------
+
+def test_conflict_record_resolve_validates_and_is_one_shot():
+    applied = []
+    rec = ConflictRecord(
+        path="home/x", seq=1, owner="sci",
+        ours_vts={"sci": 1}, theirs_vts={"bob": 1}, winner="ours",
+        ours_data=b"ours", theirs_data=b"theirs", detected_at=1.0,
+        _apply=applied.append)
+    with pytest.raises(ValueError):
+        rec.resolve("coin-flip")
+    rec.resolve("theirs")
+    assert applied == [b"theirs"]
+    assert rec.resolved and rec.resolution == "theirs"
+    with pytest.raises(RuntimeError):
+        rec.resolve("ours")
+
+
+# ---- fabric helpers ---------------------------------------------------------
+
+def two_writer_fab(tmp_path, *, write_lease=None, maintenance=None):
+    spec = FabricSpec.star(
+        str(tmp_path / "home"), str(tmp_path / "site"),
+        replica_latencies={"r1": 0.005, "r2": 0.015},
+        link=LinkModel(latency_s=HOME_LATENCY),
+        extra_sites=(SiteSpec("site2", root=str(tmp_path / "site2")),))
+    if maintenance is not None:
+        spec = dataclasses.replace(spec, maintenance=maintenance)
+    fab = Fabric(spec)
+    s = fab.login("sci", replicas=ReplicaPolicy(
+        sites=("r1", "r2"), write_quorum="majority",
+        write_lease=write_lease))
+    bob = fab.attach(s, "site2", owner="bob", mounts=[MountSpec("home/")])
+    return fab, s, bob
+
+
+PATH = "home/shared/doc.bin"
+SCI_BYTES = b"S" * 200_000
+BOB_BYTES = b"B" * 180_000
+
+
+# ---- write leases on the replica set ---------------------------------------
+
+def test_write_lease_acquire_contend_rollback_and_release(tmp_path):
+    fab, s, bob = two_writer_fab(tmp_path,
+                                 write_lease=WriteLeaseSpec(ttl_s=10.0))
+    rset, net = s.replicas, s.network
+    assert rset.acquire_write_lease("site", PATH, "write:sci") is True
+    for rep in rset.replicas.values():
+        assert rep.store.lock_owner(PATH, net.clock) == "write:sci"
+    # a second writer contends and leaves NO partial grants behind
+    assert rset.acquire_write_lease("site2", PATH, "write:bob") is False
+    for rep in rset.replicas.values():
+        assert rep.store.lock_owner(PATH, net.clock) == "write:sci"
+    assert rset.lease_acquired == 1 and rset.lease_contended == 1
+    assert rset.release_write_lease("site", PATH, "write:sci") == 2
+    # releasing when holding nothing is wire-free
+    rpc0 = net.rpc_count
+    assert rset.release_write_lease("site", PATH, "write:sci") == 0
+    assert net.rpc_count == rpc0
+    # now bob can take it
+    assert rset.acquire_write_lease("site2", PATH, "write:bob") is True
+
+
+def test_write_lease_unavailable_under_full_partition(tmp_path):
+    fab, s, bob = two_writer_fab(tmp_path,
+                                 write_lease=WriteLeaseSpec(ttl_s=10.0))
+    for r in ("r1", "r2"):
+        s.network.partition("site", r)
+    assert s.replicas.acquire_write_lease("site", PATH, "write:sci") is None
+    assert s.replicas.lease_unavailable == 1
+
+
+def test_write_lease_spec_validates():
+    with pytest.raises(ValueError):
+        WriteLeaseSpec(ttl_s=0.0)
+
+
+# ---- concurrent branches: detect, LWW, preserve -----------------------------
+
+def _divergent_write(fab, s, bob):
+    """sci quorum-writes around a dead home while bob writes the same
+    path straight at the (bob-reachable) home: two branches that know
+    nothing of each other."""
+    net = s.network
+    net.partition("site", "home")              # sci cut off from home only
+    with s.client.open(PATH, "w") as f:
+        f.write(SCI_BYTES)
+    assert s.client.pump() == 1                # parked at quorum (r1+r2)
+    [rec] = s.client.oplog.unreconciled()
+    assert rec.vts == {"sci": 1}
+    with bob.open(PATH, "w") as f:
+        f.write(BOB_BYTES)
+    assert bob.pump() == 1                     # lands at home, vts {bob:1}
+    net.heal("site", "home")
+    return rec
+
+
+def test_concurrent_branches_conflict_never_silently_clobber(tmp_path):
+    fab, s, bob = two_writer_fab(tmp_path)
+    rec = _divergent_write(fab, s, bob)
+    assert s.client.reconcile() == 1
+    [c] = s.client.conflicts
+    assert (c.path, c.owner) == (PATH, "sci")
+    assert c.ours_vts == {"sci": 1} and c.theirs_vts == {"bob": 1}
+    # deterministic LWW: equal causal mass, 'sci' > 'bob' lexically
+    assert c.winner == "ours"
+    assert c.ours_data == SCI_BYTES and c.theirs_data == BOB_BYTES
+    # the winner's bytes land at home PAST both branches, and the merged
+    # frontier covers them both
+    data, st = s.server.store.get(s.token, PATH)
+    assert data == SCI_BYTES
+    assert st.version > rec.version
+    assert s.server.store.vts_of(PATH) == {"sci": 1, "bob": 1}
+    assert s.client.oplog.unreconciled() == []
+    # anti-entropy converges the replicas onto the resolved branch
+    s.replicas.resync()
+    for rep in s.replicas.replicas.values():
+        assert rep.store.get(rep.token, PATH)[0] == SCI_BYTES
+
+
+def test_operator_resolve_overrides_the_lww_pick(tmp_path):
+    fab, s, bob = two_writer_fab(tmp_path)
+    _divergent_write(fab, s, bob)
+    s.client.reconcile()
+    [c] = s.client.conflicts
+    v0 = s.server.store.stat_unchecked(PATH).version
+    c.resolve("theirs")                        # operator prefers bob's
+    data, st = s.server.store.get(s.token, PATH)
+    assert data == BOB_BYTES and st.version == v0 + 1
+    assert s.server.store.vts_of(PATH) == {"sci": 1, "bob": 1}
+    with pytest.raises(RuntimeError):
+        c.resolve("ours")
+
+
+def test_conflicts_surface_on_the_maintenance_report(tmp_path):
+    fab, s, bob = two_writer_fab(tmp_path, maintenance=MaintenanceSpec())
+    _divergent_write(fab, s, bob)
+    s.client.reconcile()
+    r = fab.maintenance_report()
+    assert r.conflicts == 1
+    [c] = r.conflict_records
+    assert isinstance(c, ConflictRecord) and c.path == PATH
+
+
+def test_reconcile_order_is_irrelevant_exactly_one_conflict(tmp_path):
+    """Whichever side reconciles first, the outcome is one ConflictRecord
+    and the same final bytes — the branch that loses the race discovers
+    it is dominated and retires quietly."""
+    fab, s, bob = two_writer_fab(tmp_path)
+    rec = _divergent_write(fab, s, bob)
+    # bob has nothing parked (his write landed connected), so "bob
+    # first" is a no-op reconcile; sci then detects the conflict
+    assert bob.reconcile() == 0
+    assert s.client.reconcile() == 1
+    assert len(s.client.conflicts) == 1
+    # a second reconcile pass finds nothing new
+    assert s.client.reconcile() == 0
+    assert len(s.client.conflicts) == 1
+
+
+def test_superseded_branch_retires_without_fanning_stale_bytes(tmp_path):
+    """When home's causal history already covers a parked branch (the
+    writer's own later write landed first), reconcile retires it quietly
+    — no conflict, no stale fan-out."""
+    fab, s, bob = two_writer_fab(tmp_path)
+    net = s.network
+    net.partition("site", "home")
+    with s.client.open(PATH, "w") as f:
+        f.write(b"old" * 1000)
+    assert s.client.pump() == 1                # parked at quorum
+    net.heal("site", "home")
+    with s.client.open(PATH, "w") as f:
+        f.write(b"new" * 1000)
+    assert s.client.pump() == 1                # lands at home, supersedes
+    assert s.client.reconcile() == 0           # parked record was retired
+    assert s.client.conflicts == []
+    assert s.server.store.get(s.token, PATH)[0] == b"new" * 1000
+
+
+# ---- write leases serialize concurrent quorum writers -----------------------
+
+def test_lease_serializes_two_quorum_writers_zero_conflicts(tmp_path):
+    fab, s, bob = two_writer_fab(tmp_path,
+                                 write_lease=WriteLeaseSpec(ttl_s=30.0))
+    net = s.network
+    net.partition("site", "home")
+    net.partition("site2", "home")             # BOTH writers lose home
+    with s.client.open(PATH, "w") as f:
+        f.write(SCI_BYTES)
+    assert s.client.pump() == 1                # sci holds the write lease
+    assert s.replicas.lease_acquired == 1
+    with bob.open(PATH, "w") as f:
+        f.write(BOB_BYTES)
+    assert bob.pump() == 0                     # contended: bob defers
+    assert s.replicas.lease_contended == 1
+    assert bob.oplog.pending()                 # queued, not lost
+    net.heal("site", "home")
+    net.heal("site2", "home")
+    assert s.client.reconcile() == 1           # sci lands; lease released
+    assert bob.pump() == 1                     # bob retries, lands ON TOP
+    data, _st = s.server.store.get(s.token, PATH)
+    assert data == BOB_BYTES
+    # serialized, causally ordered: bob's branch covers sci's
+    assert s.server.store.vts_of(PATH) == {"sci": 1, "bob": 1}
+    assert s.client.conflicts == [] and bob.conflicts == []
+    # no lease left dangling on any replica
+    for rep in s.replicas.replicas.values():
+        assert rep.store.lock_owner(PATH, net.clock) is None
+
+
+def test_lease_ttl_expiry_unblocks_a_crashed_writer(tmp_path):
+    fab, s, bob = two_writer_fab(tmp_path,
+                                 write_lease=WriteLeaseSpec(ttl_s=10.0))
+    net = s.network
+    net.partition("site", "home")
+    net.partition("site2", "home")
+    with s.client.open(PATH, "w") as f:
+        f.write(SCI_BYTES)
+    assert s.client.pump() == 1                # sci parks, holds the lease
+    with bob.open(PATH, "w") as f:
+        f.write(BOB_BYTES)
+    assert bob.pump() == 0                     # contended
+    # sci never comes back; the server-side TTL is the crash fallback
+    net.advance(11.0)
+    assert bob.pump() == 1                     # lease lapsed: bob proceeds
+    # bob built on sci's replica frontier, so his branch dominates —
+    # reconcile lands bob's bytes with no conflict
+    net.heal("site", "home")
+    net.heal("site2", "home")
+    assert bob.reconcile() == 1
+    # sci's branch is dominated: its record retires quietly (counted as
+    # reconciled) without touching home's bytes
+    assert s.client.reconcile() == 1
+    assert s.client.oplog.unreconciled() == []
+    assert s.server.store.get(s.token, PATH)[0] == BOB_BYTES
+    assert s.client.conflicts == [] and bob.conflicts == []

@@ -1,0 +1,226 @@
+"""Deterministic fault-injection harness: plan expansion, anchored
+outage windows, lazy pumping, scheduler integration, crash hooks, seeded
+chaos determinism, and the two trace-identity witnesses (FaultPlan-driven
+choreography == hand-rolled calls; unarmed == armed-empty).
+"""
+import pytest
+
+from repro.core import (
+    CrashEvent, Endpoint, Fabric, FabricSpec, FaultInjector, FaultPlan,
+    FlapEvent, HealEvent, LinkModel, MaintenanceSpec, Network,
+    PartitionEvent, ReplicaPolicy,
+)
+
+HOME_LATENCY = 0.060
+
+
+def net2():
+    net = Network(link=LinkModel(latency_s=HOME_LATENCY))
+    Endpoint("site", net)
+    Endpoint("home", net)
+    return net
+
+
+# ---- plan expansion ---------------------------------------------------------
+
+def test_actions_sort_by_time_then_declaration_order():
+    plan = FaultPlan(events=(
+        HealEvent(at_s=5.0, a="a", b="b"),
+        PartitionEvent(at_s=1.0, a="a", b="b", duration_s=2.0),
+        CrashEvent(at_s=5.0, site="home"),          # ties with the heal
+    ))
+    acts = plan.actions()
+    assert [(t, kind) for t, _i, kind, _a in acts] == [
+        (1.0, "partition"), (5.0, "heal"), (5.0, "crash")]
+    # the tie resolves in declaration order: heal (decl 0) before crash
+    assert acts[1][2] == "heal" and acts[2][2] == "crash"
+
+
+def test_flap_expands_to_anchored_windows():
+    plan = FaultPlan(events=(
+        FlapEvent(at_s=10.0, a="a", b="b", down_s=2.0, period_s=8.0,
+                  count=3),))
+    acts = plan.actions()
+    assert [t for t, *_ in acts] == [10.0, 18.0, 26.0]
+    assert all(kind == "partition" and args == ("a", "b", 2.0)
+               for _t, _i, kind, args in acts)
+
+
+@pytest.mark.parametrize("bad", [
+    lambda: PartitionEvent(at_s=-1.0, a="a", b="b"),
+    lambda: PartitionEvent(at_s=0.0, a="a", b="b", duration_s=0.0),
+    lambda: FlapEvent(at_s=0.0, a="a", b="b", down_s=0.0, period_s=1.0),
+    lambda: FlapEvent(at_s=0.0, a="a", b="b", down_s=1.0, period_s=0.0),
+    lambda: FlapEvent(at_s=0.0, a="a", b="b", down_s=1.0, period_s=1.0,
+                      count=0),
+    lambda: HealEvent(at_s=-0.5, a="a", b="b"),
+    lambda: CrashEvent(at_s=-2.0, site="home"),
+])
+def test_event_validation(bad):
+    with pytest.raises(ValueError):
+        bad()
+
+
+def test_plan_rejects_non_events():
+    with pytest.raises(TypeError):
+        FaultPlan(events=(("partition", 1.0),))
+
+
+# ---- injector semantics -----------------------------------------------------
+
+def test_windows_anchor_at_event_time_not_pump_time():
+    """The clock may jump past an event before the plan is pumped; the
+    outage window must still open at the declared instant — a window the
+    clock has fully passed is skipped, not stretched."""
+    net = net2()
+    net.arm_faults(FaultInjector(net, FaultPlan(events=(
+        PartitionEvent(at_s=1.0, a="site", b="home", duration_s=2.0),
+        PartitionEvent(at_s=10.0, a="site", b="home", duration_s=2.0),
+    ))))
+    # one coarse jump to t=5 crosses the whole first window [1, 3)
+    net.advance(5.0)
+    assert not net.is_partitioned("site", "home")   # lapsed, never stretched
+    net.advance(6.0)                                # t=11: inside [10, 12)
+    assert net.is_partitioned("site", "home")
+    net.advance(1.0)                                # t=12: window closed
+    assert not net.is_partitioned("site", "home")
+
+
+def test_heal_event_cancels_an_unbounded_partition():
+    net = net2()
+    inj = FaultInjector(net, FaultPlan(events=(
+        PartitionEvent(at_s=0.0, a="site", b="home"),      # until healed
+        HealEvent(at_s=30.0, a="site", b="home"),
+    )))
+    net.arm_faults(inj)
+    assert net.is_partitioned("site", "home")
+    net.advance(29.0)
+    assert net.is_partitioned("site", "home")
+    net.advance(2.0)
+    assert not net.is_partitioned("site", "home")
+    assert inj.done() and inj.fired == 2
+
+
+def test_transfer_pumps_due_events():
+    """A transfer issued after an event's time sees the outage without
+    anyone calling advance() or is_partitioned() first."""
+    from repro.core import DisconnectedError
+    net = net2()
+    net.arm_faults(FaultInjector(net, FaultPlan(events=(
+        PartitionEvent(at_s=0.0, a="site", b="home", duration_s=5.0),))))
+    with pytest.raises(DisconnectedError):
+        net.rpc("site", "home", "probe")
+
+
+# ---- fabric integration -----------------------------------------------------
+
+def mfab(tmp_path, maintenance=None):
+    spec = FabricSpec.star(str(tmp_path / "h"), str(tmp_path / "s"),
+                           replica_latencies={"r1": 0.005},
+                           link=LinkModel(latency_s=HOME_LATENCY))
+    if maintenance is not None:
+        import dataclasses
+        spec = dataclasses.replace(spec, maintenance=maintenance)
+    return Fabric(spec)
+
+
+def test_crash_event_drops_server_session_state(tmp_path):
+    fab = mfab(tmp_path)
+    s = fab.login("sci")
+    inj = fab.arm_faults(FaultPlan(events=(
+        CrashEvent(at_s=s.network.clock + 1.0, site="home"),)))
+    s.network.advance(2.0)
+    assert inj.crashes == 1
+    from repro.core import AuthError
+    with pytest.raises(AuthError):
+        s.server.store.get(s.token, "home/x")       # token gone
+    s.remount()                                     # the crontab restart
+    with s.client.open("home/d/a.bin", "w") as f:
+        f.write(b"recovered")
+    s.client.pump()
+    assert s.server.store.get(s.token, "home/d/a.bin")[0] == b"recovered"
+
+
+def test_scheduler_walks_the_clock_through_fault_times(tmp_path):
+    """run_until must tick *at* fault instants, so windows open and close
+    on schedule even when no task is due there."""
+    fab = mfab(tmp_path, maintenance=MaintenanceSpec())
+    s = fab.login("sci", replicas=ReplicaPolicy(sites=("r1",)))
+    t0 = s.network.clock
+    inj = fab.arm_faults(FaultPlan(events=(
+        PartitionEvent(at_s=t0 + 2.0, a="home", b="r1", duration_s=3.0),)))
+    assert s.scheduler.next_event() <= t0 + 2.0
+    s.scheduler.run_until(t0 + 2.5, advance_to_stop=True)
+    assert s.network.is_partitioned("home", "r1")
+    s.scheduler.run_until(t0 + 6.0)
+    assert not s.network.is_partitioned("home", "r1")
+    assert inj.done()
+
+
+# ---- seeded chaos -----------------------------------------------------------
+
+def test_chaos_is_a_pure_function_of_the_seed():
+    pairs = [("site", "home"), ("home", "r1")]
+    a = FaultPlan.chaos(pairs, seed=7, horizon_s=60.0, events=6,
+                        crash_sites=("home",))
+    b = FaultPlan.chaos(pairs, seed=7, horizon_s=60.0, events=6,
+                        crash_sites=("home",))
+    c = FaultPlan.chaos(pairs, seed=8, horizon_s=60.0, events=6,
+                        crash_sites=("home",))
+    assert a == b
+    assert a != c
+    assert all(isinstance(e, (PartitionEvent, CrashEvent))
+               for e in a.events)
+    for e in a.events:
+        if isinstance(e, PartitionEvent):
+            assert 0.0 <= e.at_s < 60.0
+            assert 0.5 <= e.duration_s <= 5.0
+
+
+def test_chaos_validation():
+    with pytest.raises(ValueError):
+        FaultPlan.chaos([], seed=1, horizon_s=10.0)
+    with pytest.raises(ValueError):
+        FaultPlan.chaos([("a", "b")], seed=1, horizon_s=0.0)
+    with pytest.raises(ValueError):
+        FaultPlan.chaos([("a", "b")], seed=1, horizon_s=10.0,
+                        min_down_s=3.0, max_down_s=1.0)
+
+
+# ---- trace identity witnesses ----------------------------------------------
+
+def _drive(fab):
+    s = fab.login("bench", replicas=ReplicaPolicy(sites=("r1",)))
+    with s.client.open("home/d/t.bin", "w") as f:
+        f.write(b"T" * 300_000)
+    s.client.pump()
+    s.network.advance(10.0)              # crosses any armed window
+    s.client.pump()
+    with s.client.open("home/d/t.bin") as f:
+        f.read()
+    return s.network.trace
+
+
+def test_faultplan_choreography_matches_hand_rolled_calls(tmp_path):
+    """The same outage declared via FaultPlan or issued as a direct
+    ``network.partition(...)`` call at the same instant yields the same
+    wire trace — the harness adds scheduling, not behavior."""
+    fab_hand = mfab(tmp_path / "hand")
+    s_pre = fab_hand.network.clock
+    fab_hand.network.partition("home", "r1", duration=8.0)
+    assert fab_hand.network.clock == s_pre
+    hand = _drive(fab_hand)
+
+    fab_plan = mfab(tmp_path / "plan")
+    fab_plan.arm_faults(FaultPlan(events=(
+        PartitionEvent(at_s=fab_plan.network.clock, a="home", b="r1",
+                       duration_s=8.0),)))
+    planned = _drive(fab_plan)
+    assert hand == planned
+
+
+def test_armed_empty_plan_leaves_the_trace_bit_identical(tmp_path):
+    unarmed = _drive(mfab(tmp_path / "u"))
+    fab = mfab(tmp_path / "a")
+    fab.arm_faults(FaultPlan())
+    assert _drive(fab) == unarmed

@@ -130,14 +130,42 @@ def test_reverify_while_still_partitioned_keeps_everything_at_risk(wired):
     assert lm.at_risk == {"home/x"}
 
 
-def test_release_clears_at_risk_tracking(wired):
+def test_connected_release_clears_at_risk_tracking(wired):
+    net, store, lm = wired
+    assert lm.acquire("home/x")
+    lm.at_risk.add("home/x")    # e.g. left over from a healed partition
+    lm.release("home/x")
+    assert lm.at_risk == set()
+    assert lm.held == set()
+    assert lm.pending_release == set()
+    assert store.lock_owner("home/x", net.clock) is None
+
+
+def test_partitioned_release_is_remembered_and_finished_on_heal(wired):
+    # the release() counterpart of the renew_all at-risk fix: a release
+    # the partition swallowed used to vanish from the client's books
+    # while the server kept honoring the lock until TTL expiry
     net, store, lm = wired
     assert lm.acquire("home/x")
     net.partition("site", "home")
-    lm.renew_all()
-    lm.release("home/x")        # disconnected release: expire server-side
-    assert lm.at_risk == set()
-    assert lm.held == set()
+    lm.release("home/x")
+    assert lm.held == set()                      # we no longer act as holder
+    assert lm.pending_release == {"home/x"}      # ...but the server does
+    assert lm.at_risk == {"home/x"}
+    assert store.lock_owner("home/x", net.clock) == "alice"
+    # still partitioned: reverify cannot reach the server, stays pending
+    assert lm.reverify_at_risk() == (0, 0)
+    assert lm.pending_release == {"home/x"}
+    net.heal("site", "home")
+    kept, dropped = lm.reverify_at_risk()
+    assert (kept, dropped) == (0, 1)
+    assert lm.pending_release == set() and lm.at_risk == set()
+    # the server-side lock went away NOW, not at TTL expiry: another
+    # writer can take it immediately
+    assert store.lock_owner("home/x", net.clock) is None
+    bob = LeaseManager(net, "site", "home", store, owner="bob",
+                       token=authed(store), ttl=30.0)
+    assert bob.acquire("home/x")
 
 
 # ---- localized vs remote locks ---------------------------------------------

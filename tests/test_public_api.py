@@ -35,10 +35,22 @@ MAINTENANCE_SURFACE = {
     "RetryPolicy", "ScheduledTask", "DeadLetter", "LockTable",
 }
 
+#: Concurrent-writer safety (docs/consistency.md).
+CONFLICT_SURFACE = {
+    "WriteLeaseSpec", "WriteLeaseContended", "ConflictRecord",
+    "vts_merge", "vts_dominates", "vts_concurrent",
+}
+
+#: The deterministic fault-injection harness (docs/maintenance.md).
+FAULT_SURFACE = {
+    "FaultPlan", "FaultInjector", "PartitionEvent", "FlapEvent",
+    "CrashEvent", "HealEvent",
+}
+
 
 def test_all_covers_documented_surface():
-    missing = (SPEC_SURFACE | CORE_SURFACE | MAINTENANCE_SURFACE) \
-        - set(core.__all__)
+    missing = (SPEC_SURFACE | CORE_SURFACE | MAINTENANCE_SURFACE
+               | CONFLICT_SURFACE | FAULT_SURFACE) - set(core.__all__)
     assert not missing, f"repro.core.__all__ lost exports: {sorted(missing)}"
 
 
@@ -76,7 +88,20 @@ def test_spec_layer_signatures_are_stable():
             "reconcile_period_s", "retry", "lock_lease_s"} <= m_fields
     r_fields = set(core.MaintenanceReport.__dataclass_fields__)
     assert {"tasks_run", "retries", "dead_lettered", "lock_conflicts",
-            "repairs", "double_repairs", "evictions"} <= r_fields
+            "repairs", "double_repairs", "evictions",
+            "conflicts"} <= r_fields
+    assert "write_lease" in policy_fields
+    lease_fields = set(core.WriteLeaseSpec.__dataclass_fields__)
+    assert {"ttl_s"} <= lease_fields
+    c_fields = set(core.ConflictRecord.__dataclass_fields__)
+    assert {"path", "seq", "owner", "ours_vts", "theirs_vts", "winner",
+            "ours_data", "theirs_data", "detected_at"} <= c_fields
+    for ev in (core.PartitionEvent, core.FlapEvent, core.HealEvent,
+               core.CrashEvent):
+        assert "at_s" in ev.__dataclass_fields__, f"{ev.__name__} lost at_s"
+    plan_params = inspect.signature(core.FaultPlan.chaos).parameters
+    for kw in ("seed", "horizon_s", "events", "crash_sites"):
+        assert kw in plan_params, f"FaultPlan.chaos lost keyword {kw!r}"
 
 
 def test_deprecated_shim_still_exported():

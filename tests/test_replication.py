@@ -7,10 +7,25 @@ home), a flusher crash between the home apply and the replica fan-out
 import pytest
 
 from repro.core import (
-    DisconnectedError, Fabric, FabricSpec, LinkModel, MB, ReplicaPolicy,
+    DisconnectedError, Fabric, FabricSpec, FaultInjector, FaultPlan,
+    LinkModel, MB, PartitionEvent, ReplicaPolicy,
 )
 
 HOME_LATENCY = 0.060
+
+#: Fault-plan outage window comfortably covering a quorum write + read
+#: (virtual seconds); the plan auto-heals once the clock passes it.
+OUTAGE_S = 120.0
+
+
+def arm_home_outage(s, t0):
+    """Declaratively cut home off from everyone (site, r1, r2) for
+    ``OUTAGE_S`` starting at ``t0`` — the FaultPlan replacement for the
+    old hand-rolled partition/heal loops."""
+    plan = FaultPlan(events=tuple(
+        PartitionEvent(at_s=t0, a=a, b=b, duration_s=OUTAGE_S)
+        for a, b in (("site", "home"), ("home", "r1"), ("home", "r2"))))
+    s.client.network.arm_faults(FaultInjector(s.client.network, plan))
 
 
 def login(tmp_path, replica_sites, tag="a", write_quorum=1):
@@ -127,7 +142,7 @@ def test_flusher_crash_then_replay_converges_replicas(rsession):
 
     real_begin = s.replicas.begin_apply
 
-    def crash(name, path, data, version, src=None):
+    def crash(name, path, data, version, src=None, vts=None):
         raise RuntimeError("flusher crashed after home apply")
 
     s.replicas.begin_apply = crash
@@ -214,7 +229,7 @@ def test_flusher_crash_after_partial_acks_resumes_from_persisted_acks(
 
     real_begin = s.replicas.begin_apply
 
-    def crash_before_any_replica(name, path, data, version, src=None):
+    def crash_before_any_replica(name, path, data, version, src=None, vts=None):
         raise RuntimeError("flusher crashed after the home ack (W-1=1)")
 
     s.replicas.begin_apply = crash_before_any_replica
@@ -247,8 +262,8 @@ def test_home_partitioned_whole_write_majority_quorum_still_acks(tmp_path):
     """The headline: home down for the entire write, majority still acks
     — and a cold read is served fresh from an acked replica."""
     s = qlogin(tmp_path, "majority")
-    for pair in (("site", "home"), ("home", "r1"), ("home", "r2")):
-        s.client.network.partition(*pair)
+    t0 = s.client.network.clock
+    arm_home_outage(s, t0)
     payload = b"H" * 250_000
     path = "home/out/h.dat"
     with s.client.open(path, "w") as f:
@@ -269,9 +284,9 @@ def test_home_partitioned_whole_write_majority_quorum_still_acks(tmp_path):
         assert f.read() == payload
     assert s.client.cache.fills_from.get("r1") == 1
 
-    # heal: reconnect() reattaches + reconciles the parked op to home
-    for pair in (("site", "home"), ("home", "r1"), ("home", "r2")):
-        s.client.network.heal(*pair)
+    # the outage window lapses (plan auto-heal): reconnect() reattaches
+    # + reconciles the parked op to home
+    s.client.network.advance(t0 + OUTAGE_S - s.client.network.clock)
     s.client.reconnect()
     assert s.client.oplog.unreconciled() == []
     data, st = s.server.store.get(s.token, path)
@@ -356,16 +371,15 @@ def test_reconcile_lands_on_top_when_catalog_undercounted_version(tmp_path):
     s.replicas.catalog.quorum_versions.clear()
     s.replicas.catalog._holders.clear()
 
-    for pair in (("site", "home"), ("home", "r1"), ("home", "r2")):
-        s.client.network.partition(*pair)
+    t0 = s.client.network.clock
+    arm_home_outage(s, t0)
     with s.client.open(path, "w") as f:
         f.write(b"new-bytes")
     assert s.client.pump() == 1                  # quorum at pinned v1
     [rec] = s.client.oplog.unreconciled()
     assert rec.version == 1                      # the under-count
 
-    for pair in (("site", "home"), ("home", "r1"), ("home", "r2")):
-        s.client.network.heal(*pair)
+    s.client.network.advance(t0 + OUTAGE_S - s.client.network.clock)
     s.client.reconnect()                         # reattach + reconcile
     data, st = s.server.store.get(s.token, path)
     assert data == b"new-bytes"                  # the acked write survived

@@ -14,8 +14,9 @@ import dataclasses
 import pytest
 
 from repro.core import (
-    Fabric, FabricSpec, LinkModel, LockTable, MB, MaintenanceSpec,
-    MountSpec, Network, ReplicaPolicy, RetryPolicy, SiteSpec,
+    Fabric, FabricSpec, FaultPlan, LinkModel, LockTable, MB,
+    MaintenanceSpec, MountSpec, Network, PartitionEvent, ReplicaPolicy,
+    RetryPolicy, SiteSpec,
 )
 from repro.core.tasks import MaintenanceScheduler
 
@@ -244,7 +245,11 @@ def test_lease_task_dead_letters_under_partition_and_revives(tmp_path):
     assert s.client.lock("home/d/f")
     net = s.network
     t0 = net.clock
-    net.partition("site", "home")
+    # declarative chaos: a 40 s site<->home outage opening now — the
+    # scheduler pumps the plan as it walks the clock, and the window
+    # auto-heals at t0+40 (no hand-rolled partition/heal choreography)
+    fab.arm_faults(FaultPlan(events=(
+        PartitionEvent(at_s=t0, a="site", b="home", duration_s=40.0),)))
     s.scheduler.run_until(t0 + 40.0)
     # lease renewal fails at t0+10, retries at +11/+13/+17, then dies
     r = s.maintenance_report()
@@ -254,7 +259,7 @@ def test_lease_task_dead_letters_under_partition_and_revives(tmp_path):
     assert dl.attempts == 4 and dl.backoff_s == (1.0, 2.0, 4.0)
     lm = s.client.leases["home/"]
     assert lm.at_risk == {"home/d/f"}      # honest: unconfirmed, not held
-    net.heal("site", "home")
+    assert not net.is_partitioned("site", "home")   # window lapsed
     s.scheduler.revive("lease:sci@site")
     s.scheduler.run_until(net.clock + 11.0)
     r = s.maintenance_report()
