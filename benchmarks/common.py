@@ -118,6 +118,16 @@ def endpoint_utilization(net) -> Dict[str, Tuple[float, float, int]]:
     return out
 
 
+def emit_byte_provenance(prefix: str, net) -> None:
+    """One ``<prefix>/provenance`` row: replica-apply payload bytes by
+    source class — third-party (storage->storage movement) vs
+    client-mediated (pushed off a client session's NIC).  The bulk
+    plane's offload witness (docs/maintenance.md)."""
+    emit(f"{prefix}/provenance", 0.0,
+         f"third_party={net.bytes_third_party};"
+         f"client_mediated={net.bytes_client_mediated}")
+
+
 def emit_endpoint_utilization(prefix: str, net,
                               endpoints: Optional[list] = None) -> None:
     """One ``<prefix>/util_<endpoint>`` row per endpoint: busy channel

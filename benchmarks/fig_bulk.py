@@ -1,0 +1,242 @@
+"""Bulk-transfer plane: adaptive streams + third-party movement (gated).
+
+Four self-gating claims (ISSUE 10 acceptance criteria):
+
+  A. **Adaptive beats fixed.**  A checkpoint-sized (GB-scale) transfer
+     over a high-BDP link drains strictly faster under the AIMD
+     planner (``BulkTransfer``, seeded at the BDP grant) than through
+     the legacy fixed 12-stream pool: 12 window-limited streams cap
+     the pair at ``12 x per_stream_bw`` while the grant fills the link.
+  B. **Third-party repair drains faster.**  With two stale replicas and
+     equal NIC budgets everywhere, the maintenance scheduler's
+     ``repair:`` family drains strictly faster when applies pull from
+     the cheapest fresh *replica* (queue-aware source spread across
+     home + r1) than when every byte serializes through home.
+  C. **Read repair comes off the client's NIC.**  A client reading a
+     stale-replica working set repairs it via third-party pulls: the
+     drain is strictly faster and the client endpoint's busy-seconds
+     measurably lower than the client-mediated push path.
+  D. **Spec-unset is free.**  The same mixed workload with ``bulk``
+     unset and with a neutral fixed-width spec (``max_streams=12``,
+     ``adapt=False``, ``third_party=False``) produces bit-identical
+     transport traces.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import tempfile
+
+from benchmarks.common import (
+    emit, emit_byte_provenance, emit_endpoint_utilization, timed,
+)
+
+REPLICA_LATENCIES = {"r1": 0.005, "r2": 0.015, "r3": 0.025}
+HIGH_BDP_LATENCY = 0.060
+PATHS = "home/data/part{:02d}.bin"
+
+
+def _bulk_specs(smoke: bool):
+    from repro.core import MB, BulkSpec
+
+    probe = (4 if smoke else 32) * MB
+    fixed = BulkSpec(min_streams=12, max_streams=12, adapt=False,
+                     third_party=False)
+    adaptive = BulkSpec(max_streams=64, probe_bytes=probe)
+    neutral = BulkSpec(min_streams=1, max_streams=12, adapt=False,
+                       third_party=False)
+    third_party = BulkSpec(min_streams=1, max_streams=12, adapt=False,
+                           third_party=True)
+    return fixed, adaptive, neutral, third_party
+
+
+# ---- A: adaptive vs fixed on one high-BDP pair ------------------------------
+
+def _gb_drain(spec, nbytes):
+    from repro.core import BulkTransfer, Endpoint, LinkModel, Network
+
+    net = Network(link=LinkModel(latency_s=HIGH_BDP_LATENCY))
+    Endpoint("a", net)
+    Endpoint("b", net)
+    return BulkTransfer(net, spec).push("a", "b", nbytes)
+
+
+def _login(tmp, tag, bulk, *, maintenance=None):
+    from repro.core import Fabric, FabricSpec, LinkModel, ReplicaPolicy
+
+    spec = FabricSpec.star(f"{tmp}/home-{tag}", f"{tmp}/site-{tag}",
+                           replica_latencies=REPLICA_LATENCIES,
+                           link=LinkModel(latency_s=HIGH_BDP_LATENCY))
+    if maintenance is not None:
+        spec = dataclasses.replace(spec, maintenance=maintenance)
+    return Fabric(spec).login("sci", replicas=ReplicaPolicy(
+        sites=tuple(REPLICA_LATENCIES), bulk=bulk))
+
+
+def _stale_replicas(s, n_paths, size, targets=("r2", "r3")):
+    """Seed every replica, then land a new version that only the
+    non-target replicas see: ``targets`` end lagging on every path."""
+    net = s.client.network
+    payload_v1 = b"a" * size
+    payload_v2 = b"b" * size
+    for i in range(n_paths):
+        s.server.store.put(s.token, PATHS.format(i), payload_v1)
+    s.replicas.resync()
+    for i in range(n_paths):
+        s.server.store.put(s.token, PATHS.format(i), payload_v2)
+    sources = [ep for ep in ("home", "r1", "r2", "r3") if ep not in targets]
+    for t in targets:
+        for src in sources + [x for x in targets if x != t]:
+            net.partition(src, t)
+    s.replicas.resync()
+    for t in targets:
+        for src in sources + [x for x in targets if x != t]:
+            net.heal(src, t)
+    for t in targets:
+        lag = s.replicas.replicas[t].lagging
+        assert all(PATHS.format(i) in lag for i in range(n_paths)), \
+            f"{t} not lagging as arranged"
+    return payload_v2
+
+
+def _arm_budgets(net, budget, endpoints=("home", "site", "r1", "r2", "r3")):
+    for ep in endpoints:
+        net.set_nic_budget(ep, budget)
+
+
+# ---- B: scheduled repair drain, third-party vs home-mediated ----------------
+
+def _repair_drain(tmp, tag, bulk, n_paths, size, budget):
+    from repro.core import MaintenanceSpec
+
+    maint = MaintenanceSpec(resync_period_s=10_000.0,
+                            repair_period_s=1.0,
+                            lease_period_s=10_000.0,
+                            reconcile_period_s=10_000.0)
+    s = _login(tmp, tag, bulk, maintenance=maint)
+    net = s.client.network
+    _stale_replicas(s, n_paths, size)
+    _arm_budgets(net, budget)
+    t0 = net.clock
+    s.scheduler.run_until(t0 + 1.1)       # one repair tick launches all
+    s.scheduler.quiesce()
+    return s, net.clock - t0
+
+
+# ---- C: read-repair offload, third-party vs client-mediated -----------------
+
+def _read_repair_drain(tmp, tag, bulk, n_paths, size, budget):
+    s = _login(tmp, tag, bulk)
+    net = s.client.network
+    payload = _stale_replicas(s, n_paths, size, targets=("r2",))
+    _arm_budgets(net, budget)
+    t0 = net.clock
+    for i in range(n_paths):
+        with s.client.open(PATHS.format(i)) as f:
+            assert f.read() == payload
+    net.drain()
+    return s, net.clock - t0, net.per_endpoint_busy_s.get("site", 0.0)
+
+
+# ---- D: spec-unset identity -------------------------------------------------
+
+def _identity_trace(tmp, tag, bulk, size):
+    from repro.core import MB
+
+    s = _login(tmp, tag, bulk)
+    net = s.client.network
+    payload = _stale_replicas(s, 2, size, targets=("r2",))
+    for i in range(2):
+        with s.client.open(PATHS.format(i)) as f:
+            assert f.read() == payload
+    for p in s.replicas.begin_repair_path(PATHS.format(0)):
+        net.wait(p.ack)
+        s.replicas.complete_apply(p)
+    with s.client.open("home/data/out.bin", "w") as f:
+        f.write(b"c" * (2 * MB))
+    s.client.sync()
+    net.drain()
+    return list(net.trace)
+
+
+def run(smoke: bool = False) -> int:
+    from repro.core import GB, MB
+
+    fixed, adaptive, neutral, third_party = _bulk_specs(smoke)
+    gb = 64 * MB if smoke else 1 * GB
+    n_paths = 3 if smoke else 6
+    # Smoke payloads must still overrun the repair tick's 1.1 s scheduler
+    # window through home's NIC, else both drains report the window floor.
+    size = (16 if smoke else 32) * MB
+    budget = (80 if smoke else 150) * MB
+    failures = []
+
+    # -- A ------------------------------------------------------------------
+    us_f, fixed_res = timed(lambda: _gb_drain(fixed, gb).elapsed_s)
+    us_a, adapt_res = timed(lambda: _gb_drain(adaptive, gb).elapsed_s)
+    emit("bulk/fixed12_drain_s", us_f, f"{fixed_res:.4f}")
+    emit("bulk/adaptive_drain_s", us_a, f"{adapt_res:.4f}")
+    widths = _gb_drain(adaptive, gb).widths
+    emit("bulk/adaptive_widths", 0.0, ";".join(map(str, widths)))
+    if not adapt_res < fixed_res:
+        failures.append(
+            f"adaptive drain {adapt_res:.4f}s not strictly under fixed-12 "
+            f"{fixed_res:.4f}s")
+
+    # -- B ------------------------------------------------------------------
+    with tempfile.TemporaryDirectory() as tmp:
+        s_cm, cm_drain = _repair_drain(tmp, "repair-cm", None,
+                                       n_paths, size, budget)
+        s_tp, tp_drain = _repair_drain(tmp, "repair-tp", third_party,
+                                       n_paths, size, budget)
+        emit("bulk/repair_drain_mediated_s", 0.0, f"{cm_drain:.4f}")
+        emit("bulk/repair_drain_third_party_s", 0.0, f"{tp_drain:.4f}")
+        emit_byte_provenance("bulk/repair_tp", s_tp.client.network)
+        if not tp_drain < cm_drain:
+            failures.append(
+                f"third-party repair drain {tp_drain:.4f}s not strictly "
+                f"under home-mediated {cm_drain:.4f}s at equal budgets")
+        if s_tp.replicas.third_party_pulls == 0:
+            failures.append("third-party repair drain made no replica pulls")
+
+        # -- C --------------------------------------------------------------
+        s_cm, cm_drain, cm_busy = _read_repair_drain(
+            tmp, "read-cm", None, n_paths, size, budget)
+        s_tp, tp_drain, tp_busy = _read_repair_drain(
+            tmp, "read-tp", third_party, n_paths, size, budget)
+        emit("bulk/read_repair_mediated_s", 0.0,
+             f"{cm_drain:.4f};client_busy_s={cm_busy:.4f}")
+        emit("bulk/read_repair_third_party_s", 0.0,
+             f"{tp_drain:.4f};client_busy_s={tp_busy:.4f}")
+        emit_byte_provenance("bulk/read_cm", s_cm.client.network)
+        emit_byte_provenance("bulk/read_tp", s_tp.client.network)
+        emit_endpoint_utilization("bulk/read_tp", s_tp.client.network,
+                                  endpoints=["site", "home", "r1", "r2"])
+        if not tp_drain < cm_drain:
+            failures.append(
+                f"third-party read-repair drain {tp_drain:.4f}s not "
+                f"strictly under client-mediated {cm_drain:.4f}s")
+        if not tp_busy < 0.8 * cm_busy:
+            failures.append(
+                f"client NIC busy {tp_busy:.4f}s not measurably under "
+                f"client-mediated {cm_busy:.4f}s")
+        if s_cm.client.network.bytes_client_mediated == 0:
+            failures.append("mediated run recorded no client-mediated bytes")
+        if s_tp.client.network.bytes_third_party == 0:
+            failures.append("third-party run recorded no third-party bytes")
+
+        # -- D --------------------------------------------------------------
+        base = _identity_trace(tmp, "ident-unset", None, size)
+        spec = _identity_trace(tmp, "ident-neutral", neutral, size)
+        identical = int(base == spec)
+        emit("bulk/spec_unset_trace_identical", 0.0, identical)
+        if not identical:
+            failures.append("neutral BulkSpec trace differs from spec-unset")
+
+    for f in failures:
+        print(f"FAIL(fig_bulk): {f}", file=sys.stderr)
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(run())

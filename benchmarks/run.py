@@ -27,15 +27,15 @@ def main(argv=None) -> int:
     from benchmarks import (
         table1_sizes, fig23_iozone, fig4_build, fig5_largefile,
         fig_replica_read, fig_quorum_write, fig_congestion,
-        fig_maintenance, fig_conflict, fig_eviction, sharing_census,
-        roofline,
+        fig_maintenance, fig_conflict, fig_eviction, fig_bulk,
+        sharing_census, roofline,
     )
 
     rc = 0
     for mod in (table1_sizes, fig23_iozone, fig4_build, fig5_largefile,
                 fig_replica_read, fig_quorum_write, fig_congestion,
-                fig_maintenance, fig_conflict, fig_eviction, sharing_census,
-                roofline):
+                fig_maintenance, fig_conflict, fig_eviction, fig_bulk,
+                sharing_census, roofline):
         rc |= int(mod.run(smoke=args.smoke) or 0)
     return rc
 

@@ -14,6 +14,10 @@ from repro.core.striping import (  # noqa: F401
     plan_stripes, reassemble, StripePlan, StripedTransfer, TransferGroup,
     STRIPE_THRESHOLD, MIN_BLOCK, MAX_STRIPES,
 )
+from repro.core.bulk import (  # noqa: F401
+    BulkResult, BulkSpec, BulkTransfer, ensure_channel_width,
+    grant_streams,
+)
 from repro.core.store import HomeStore, ObjectStat  # noqa: F401
 from repro.core.cache import CacheSpace, CacheEntry, CacheStats  # noqa: F401
 from repro.core.oplog import (  # noqa: F401
@@ -52,6 +56,9 @@ __all__ = [
     # striping
     "plan_stripes", "reassemble", "StripePlan", "StripedTransfer",
     "TransferGroup", "STRIPE_THRESHOLD", "MIN_BLOCK", "MAX_STRIPES",
+    # bulk-transfer plane (docs/transport.md)
+    "BulkSpec", "BulkTransfer", "BulkResult", "grant_streams",
+    "ensure_channel_width",
     # stores / cache / WAL
     "HomeStore", "ObjectStat", "CacheSpace", "CacheEntry", "CacheStats",
     "MetaOpQueue", "OpRecord",

@@ -46,6 +46,7 @@ import warnings
 from dataclasses import dataclass, field, replace as _dc_replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.bulk import BulkSpec
 from repro.core.faults import FaultInjector, FaultPlan
 from repro.core.namespace import XufsClient
 from repro.core.replication import (
@@ -156,6 +157,13 @@ class ReplicaPolicy:
     written around a dead home are still caught at reconcile time by
     their vector timestamps.
 
+    ``bulk`` is an optional :class:`BulkSpec` (``repro.core.bulk``,
+    ``docs/transport.md``): apply/fetch stripe widths follow the granted
+    stream budget, and with ``third_party=True`` maintenance repairs
+    pull from the cheapest fresh replica instead of home or the client.
+    Unset ⇒ the session inherits ``FabricSpec.bulk``; both unset ⇒
+    fixed-width striping, legacy sources, traces bit-identical.
+
     ``capacity_bytes`` survives as a deprecated alias that assembles
     ``EvictionSpec(capacity=...)`` and warns once per process (the
     ``ussh_login`` shim pattern).
@@ -167,6 +175,7 @@ class ReplicaPolicy:
     capacity_bytes: Optional[int] = None
     eviction: Optional[EvictionSpec] = None
     write_lease: Optional[WriteLeaseSpec] = None
+    bulk: Optional[BulkSpec] = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "sites", tuple(self.sites))
@@ -232,6 +241,10 @@ class FabricSpec:
     #: no scheduler exists and every wire event is bit-identical to the
     #: pre-maintenance fabric.
     maintenance: Optional[MaintenanceSpec] = None
+    #: Fabric-wide default bulk-transfer policy: a login whose
+    #: ``ReplicaPolicy.bulk`` is unset inherits this.  Both unset
+    #: (default) ⇒ no bulk plane, traces bit-identical.
+    bulk: Optional[BulkSpec] = None
 
     def __post_init__(self) -> None:
         object.__setattr__(self, "sites", tuple(self.sites))
@@ -577,7 +590,9 @@ class Fabric:
                               write_quorum=replicas.write_quorum,
                               queue_aware=replicas.queue_aware,
                               eviction=replicas.eviction,
-                              write_lease=replicas.write_lease)
+                              write_lease=replicas.write_lease,
+                              bulk=replicas.bulk if replicas.bulk
+                              is not None else self.spec.bulk)
             for rname in replicas.sites:
                 if not self.network.has_link(home, rname):
                     # replica sites are near the compute site but WAN-far

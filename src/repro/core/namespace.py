@@ -146,6 +146,12 @@ class XufsClient:
         m = Mount(prefix=prefix, server_name=server_name, store=store,
                   token=token, localized=localized or [],
                   replicas=replicas)
+        if replicas is not None and replicas.bulk is not None \
+                and self.transfer.spec is None:
+            # bulk-plane opt-in rides the mount: the client's own striped
+            # transfers (cache fills, flusher fan-out of large payloads)
+            # size their stripe width from the granted stream budget
+            self.transfer.spec = replicas.bulk
         self.mounts[prefix] = m
         old_nm = self.notifiers.get(prefix)
         if old_nm is not None:

@@ -32,6 +32,7 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Set, Tuple, Union
 
+from repro.core.bulk import BulkSpec
 from repro.core.oplog import vts_merge
 from repro.core.store import HomeStore, ObjectStat
 from repro.core.striping import StripedTransfer, TransferGroup
@@ -320,7 +321,8 @@ class ReplicaSet:
                  queue_aware: bool = True,
                  capacity_bytes: Optional[int] = None,
                  eviction: Optional[EvictionSpec] = None,
-                 write_lease: Optional[WriteLeaseSpec] = None):
+                 write_lease: Optional[WriteLeaseSpec] = None,
+                 bulk: Optional[BulkSpec] = None):
         if capacity_bytes is not None:
             # deprecated alias (the PR 5 seam): assembles the structured
             # spec — ReplicaPolicy warns; this low-level path stays quiet
@@ -352,12 +354,24 @@ class ReplicaSet:
         self.queue_aware = queue_aware
         self.replicas: Dict[str, Replica] = {}
         self.catalog = ReplicaCatalog()
-        self.transfer = StripedTransfer(network)
+        #: Bulk-transfer policy (repro.core.bulk).  None = legacy
+        #: fixed-width striping and home/client-driven repair sources —
+        #: traces bit-identical to the pre-bulk fabric.  Set, it widens
+        #: apply stripes to the granted stream budget and (with
+        #: ``third_party=True``) lets maintenance pull from the
+        #: cheapest fresh *replica* instead of home/client.
+        self.bulk = bulk
+        self.transfer = StripedTransfer(network, spec=bulk)
         #: Per-path write leases for quorum writes (None = lease-free,
         #: vector timestamps alone catch divergence at reconcile).
         self.write_lease = write_lease
         self.fanout_ok = 0
         self.fanout_deferred = 0
+        #: applies whose payload moved replica->replica (a third-party
+        #: pull from a non-home source), and the ones that fell back to
+        #: the mediated path after the chosen source partitioned mid-pull
+        self.third_party_pulls = 0
+        self.third_party_fallbacks = 0
         self.read_repairs = 0
         self.lease_acquired = 0
         self.lease_contended = 0
@@ -740,22 +754,66 @@ class ReplicaSet:
         ranked.sort(key=lambda t: (t[0], t[1]))
         return [src for _, _, src in ranked]
 
+    # ---- third-party source selection (repro.core.bulk) ------------------
+    def third_party_source(self, target: str, path: str, version: int,
+                           nbytes: int) -> Optional[str]:
+        """Cheapest endpoint already holding exactly ``version`` of
+        ``path`` to drive a repair of ``target`` from — a replica or
+        home, ranked by the same queue-aware cost the read router uses
+        (``estimate_batch``: latency + channel queue + NIC backlog), so
+        a maintenance drain spreads across source NICs instead of
+        serializing through home.  GridFTP's third-party transfer: the
+        orchestrating session stays off the data path entirely.
+
+        Returns ``None`` when the bulk plane is off (``bulk`` unset or
+        ``third_party=False``) or no reachable holder exists — callers
+        then keep their legacy source (home for resync/repair, the
+        reading client for read repair).  Ties prefer a replica over
+        home (the offload is the point), then name order.
+        """
+        spec = self.bulk
+        if spec is None or not spec.third_party:
+            return None
+        cands: List[str] = []
+        for ep, rep in self.replicas.items():
+            if ep == target or path in rep.lagging:
+                continue
+            if self.catalog.version_at(path, ep) == version:
+                cands.append(ep)
+        if self.catalog.home_version(path) == version:
+            cands.append(self.home_name)
+        if not cands:
+            return None
+        costs = self._route_costs(target, cands, nbytes)
+        ranked = sorted(zip(costs, cands),
+                        key=lambda ce: (ce[0], ce[1] == self.home_name,
+                                        ce[1]))
+        for cost, ep in ranked:
+            if cost != float("inf"):      # partitioned pairs price to inf
+                return ep
+        return None
+
     # ---- write-back fan-out ---------------------------------------------
     def begin_apply(self, name: str, path: str, data: bytes,
                     version: int, src: Optional[str] = None,
-                    vts: Optional[Dict[str, int]] = None
+                    vts: Optional[Dict[str, int]] = None,
+                    fallback_src: Optional[str] = None
                     ) -> Optional[PendingApply]:
         """Launch one replica apply as overlapped channel reservations.
 
         ``src`` is the endpoint driving the apply: home during ordinary
-        fan-out and resync (third-party transfer, GridFTP-style), or the
-        client site when the flusher assembles a quorum around a
-        partitioned home.  The data stripes and the chained ack ride the
-        same pair (the ack reserves ``not_before`` the data lands), so
-        per-pair accounting shows where quorum round-trips went.  A
-        partitioned replica is recorded as lagging and yields ``None`` —
-        fan-out never blocks or fails the flusher on a WAN fault.  The
-        clock does not move; pair :meth:`complete_apply` with a
+        fan-out and resync (third-party transfer, GridFTP-style), a
+        fresh replica when :meth:`third_party_source` found a cheaper
+        holder, or the client site when the flusher assembles a quorum
+        around a partitioned home.  The data stripes and the chained ack
+        ride the same pair (the ack reserves ``not_before`` the data
+        lands), so per-pair accounting shows where quorum round-trips
+        went.  A partitioned replica is recorded as lagging and yields
+        ``None`` — fan-out never blocks or fails the flusher on a WAN
+        fault; when a *third-party source* is what partitioned,
+        ``fallback_src`` retries once through the mediated path instead
+        (a repair must not stall on a second fault domain).  The clock
+        does not move; pair :meth:`complete_apply` with a
         ``network.wait`` when the caller needs the ack on the clock.
         """
         rep = self.replicas[name]
@@ -774,10 +832,20 @@ class ReplicaSet:
             ack = self.network.transfer(name, src, "write_ack",
                                         not_before=group.completion)
         except DisconnectedError:
+            if fallback_src is not None and fallback_src != src:
+                self.third_party_fallbacks += 1
+                return self.begin_apply(name, path, data, version,
+                                        src=fallback_src, vts=vts)
             rep.lagging.add(path)
             self.catalog.drop(path, name)
             self.fanout_deferred += 1
             return None
+        if src != self.home_name and src in self.replicas:
+            self.third_party_pulls += 1
+        self.network.note_provenance(
+            "third_party" if (src == self.home_name
+                              or src in self.replicas)
+            else "client_mediated", len(data))
         return PendingApply(name=name, path=path, data=data,
                             version=version, src=src, group=group, ack=ack,
                             vts=vts)
@@ -797,10 +865,12 @@ class ReplicaSet:
 
     def apply_to_replica(self, name: str, path: str, data: bytes,
                          version: int, src: Optional[str] = None,
-                         vts: Optional[Dict[str, int]] = None) -> bool:
+                         vts: Optional[Dict[str, int]] = None,
+                         fallback_src: Optional[str] = None) -> bool:
         """Blocking apply (anti-entropy repair path): launch, wait the
         ack onto the clock, land the bytes."""
-        p = self.begin_apply(name, path, data, version, src=src, vts=vts)
+        p = self.begin_apply(name, path, data, version, src=src, vts=vts,
+                             fallback_src=fallback_src)
         if p is None:
             return False
         self.network.wait(p.ack)
@@ -837,8 +907,11 @@ class ReplicaSet:
             # on a capacity-bounded replica the read reaching this point
             # IS the placement signal: the path is hot, so read repair
             # doubles as demand placement (admission still gates it)
-            p = self.begin_apply(name, path, data, version,
-                                 src=client_name, vts=vts)
+            tp = self.third_party_source(name, path, version, len(data))
+            src = tp if tp is not None else client_name
+            p = self.begin_apply(
+                name, path, data, version, src=src, vts=vts,
+                fallback_src=client_name if tp is not None else None)
             if p is None:
                 continue          # still partitioned: stays lagging
             self.complete_apply(p)
@@ -925,9 +998,16 @@ class ReplicaSet:
                             rep.lagging.discard(path)
                             continue
                 data, st = blob
+                # a replica already converged this pass is a third-party
+                # source for the next one — the catalog records it at
+                # complete_apply, so selection sees it immediately
+                tp = self.third_party_source(rep.name, path, st.version,
+                                             len(data))
                 if self.apply_to_replica(
-                        rep.name, path, data, st.version,
-                        vts=self.home_store.vts_of(path) or None):
+                        rep.name, path, data, st.version, src=tp,
+                        vts=self.home_store.vts_of(path) or None,
+                        fallback_src=self.home_name
+                        if tp not in (None, self.home_name) else None):
                     repaired += 1
         for rep in self.replicas.values():
             # drop objects deleted at home (a parked quorum write that home
@@ -970,7 +1050,9 @@ class ReplicaSet:
         replica that lags or trails it: the schedulable read-repair
         drain unit.
 
-        Home-driven third-party pushes, overlapped channel reservations;
+        Storage-driven pushes (home, or the cheapest fresh replica when
+        the bulk plane's third-party selection is armed — see
+        :meth:`third_party_source`), overlapped channel reservations;
         the caller (the maintenance scheduler) completes each apply via
         :meth:`complete_apply` when its ack matures, so repair wire time
         never rides a reader's clock.  A path deleted at home while the
@@ -993,8 +1075,12 @@ class ReplicaSet:
                 continue
             if path not in rep.lagging and held is None:
                 continue      # never placed here: placement, not repair
-            p = self.begin_apply(name, path, data, st.version,
-                                 vts=self.home_store.vts_of(path) or None)
+            tp = self.third_party_source(name, path, st.version, len(data))
+            p = self.begin_apply(
+                name, path, data, st.version, src=tp,
+                vts=self.home_store.vts_of(path) or None,
+                fallback_src=self.home_name
+                if tp not in (None, self.home_name) else None)
             if p is not None:
                 pending.append(p)
         return pending

@@ -18,6 +18,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import List, Optional, Tuple
 
+from repro.core.bulk import BulkSpec, ensure_channel_width, grant_streams
 from repro.core.transport import (
     Endpoint, KB, Network, Transfer, TransferBatch, TransferRequest,
 )
@@ -93,6 +94,14 @@ class StripedTransfer:
 
     network: Network
     max_stripes: int = MAX_STRIPES
+    # optional bulk policy (repro.core.bulk): when set, the plan width
+    # follows the granted stream budget — BDP/NIC/payload-derived — and
+    # the channel pool is raised to carry it.  None (default) keeps the
+    # fixed MAX_STRIPES constant, plans and traces bit-identical; a
+    # fixed-width spec (adapt=False, max_streams=12) is likewise
+    # provably identical because the payload clamp mirrors
+    # ``plan_stripes``' own ``nbytes // min_block`` bound.
+    spec: Optional[BulkSpec] = None
 
     def begin(self, src: str, dst: str, payload: bytes, *,
               encrypted: bool = False, max_stripes: Optional[int] = None,
@@ -104,8 +113,13 @@ class StripedTransfer:
         aggregate n-stream model — but the stripes now occupy channels,
         letting unrelated transfers overlap with them.
         """
-        plan = plan_stripes(len(payload),
-                            max_stripes=max_stripes or self.max_stripes)
+        if max_stripes is None and self.spec is not None:
+            width = grant_streams(self.network, src, dst, len(payload),
+                                  self.spec)
+            ensure_channel_width(self.network, width)
+        else:
+            width = max_stripes or self.max_stripes
+        plan = plan_stripes(len(payload), max_stripes=width)
         n = max(plan.n_streams, 1)
         reqs = [
             TransferRequest(src, dst, "stripe", ln, n, encrypted, not_before)

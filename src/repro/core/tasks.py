@@ -239,6 +239,11 @@ class MaintenanceReport:
     double_repairs: int
     evictions: int
     conflicts: int
+    #: replica-apply payload bytes by provenance (Network counters):
+    #: third-party = storage->storage movement, client-mediated = pushed
+    #: off a client session's NIC — the bulk plane's offload witness
+    bytes_third_party: int
+    bytes_client_mediated: int
     inflight: int
     #: task name -> {owner, runs, failures, attempt, next_due, dead}
     tasks: Dict[str, Dict[str, object]]
@@ -490,6 +495,8 @@ class MaintenanceScheduler:
             double_repairs=self.double_repairs,
             evictions=self.evictions,
             conflicts=len(self.conflicts),
+            bytes_third_party=self.network.bytes_third_party,
+            bytes_client_mediated=self.network.bytes_client_mediated,
             inflight=len(self._inflight),
             tasks={t.name: {
                 "owner": t.owner, "runs": t.runs,

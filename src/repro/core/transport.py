@@ -246,6 +246,12 @@ class Network:
     clock: float = 0.0
     bytes_sent: int = 0
     rpc_count: int = 0
+    # byte provenance for replica-apply payloads (wire-free accounting):
+    # third-party = moved storage->storage (home->replica or
+    # replica->replica); client-mediated = pushed from a client session's
+    # endpoint.  The bulk plane's offload witness (docs/maintenance.md).
+    bytes_third_party: int = 0
+    bytes_client_mediated: int = 0
     channels_per_pair: int = 12       # parallel TCP connections per pair
     trace_limit: int = 100_000        # reservations recorded (first N)
     _partitions: Dict[Tuple[str, str], float] = field(default_factory=dict)
@@ -458,6 +464,19 @@ class Network:
 
     def nic_budget(self, endpoint: str) -> Optional[float]:
         return self.nic_budgets.get(endpoint)
+
+    # ---- byte provenance ------------------------------------------------
+    def note_provenance(self, kind: str, nbytes: int) -> None:
+        """Attribute ``nbytes`` of replica-apply payload to its source
+        class: ``"third_party"`` (storage->storage movement) or
+        ``"client_mediated"`` (pushed off a client session's NIC).
+        Pure accounting — touches no wire, no clock, no trace."""
+        if kind == "third_party":
+            self.bytes_third_party += int(nbytes)
+        elif kind == "client_mediated":
+            self.bytes_client_mediated += int(nbytes)
+        else:
+            raise ValueError(f"unknown provenance kind: {kind!r}")
 
     def _charge_nic(self, endpoint: str, start: float, nbytes: int,
                     completion: float) -> float:

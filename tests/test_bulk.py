@@ -1,0 +1,320 @@
+"""Bulk-transfer plane: adaptive stream grants, AIMD waves, third-party
+replica→replica repair, and the gating identities (spec-unset and
+fixed-width plans are bit-identical to the legacy engine)."""
+import dataclasses
+
+import pytest
+
+from repro.core import (
+    BulkSpec, BulkTransfer, Endpoint, Fabric, FabricSpec, KB, LinkModel,
+    MaintenanceSpec, MB, Network, ReplicaPolicy, RetryPolicy,
+    StripedTransfer, ensure_channel_width, grant_streams,
+)
+
+#: Fixed-width, no-third-party spec: provably identical to the legacy
+#: 12-stream constant (the satellite-1 identity witness).
+NEUTRAL = BulkSpec(min_streams=1, max_streams=12, adapt=False,
+                   third_party=False)
+
+
+def pair_net(width=12, names=("a", "b")):
+    net = Network(channels_per_pair=width)
+    for nm in names:
+        Endpoint(nm, net)
+    return net
+
+
+# ---- BulkSpec / grant_streams ----------------------------------------------
+
+def test_bulkspec_validates():
+    for bad in (dict(min_streams=0), dict(min_streams=8, max_streams=4),
+                dict(probe_bytes=0), dict(grow_step=0), dict(backoff=1.0),
+                dict(backoff=0.0), dict(improve_threshold=-0.1)):
+        with pytest.raises(ValueError):
+            BulkSpec(**bad)
+
+
+def test_grant_streams_fills_the_bdp():
+    net = pair_net()
+    # default link: 3.75 GB/s over 80 MB/s window-limited streams
+    # => exactly 48 streams fill the path
+    assert grant_streams(net, "a", "b", 1024 * MB, BulkSpec()) == 48
+    # spec window clamps the fill count
+    assert grant_streams(net, "a", "b", 1024 * MB,
+                         BulkSpec(max_streams=16)) == 16
+    # payload clamp: one stream per 64 KB, tiny payloads stay single
+    assert grant_streams(net, "a", "b", 60 * KB, BulkSpec()) == 1
+    assert grant_streams(net, "a", "b", 256 * KB, BulkSpec()) == 4
+
+
+def test_grant_streams_respects_nic_budget():
+    net = pair_net()
+    net.set_nic_budget("a", 160 * MB)   # 2 streams' worth of NIC
+    assert grant_streams(net, "a", "b", 1024 * MB, BulkSpec()) == 2
+    # fixed-width mode ignores the derivation entirely (identity mode)
+    assert grant_streams(net, "a", "b", 1024 * MB, NEUTRAL) == 12
+
+
+# ---- channels_per_pair raised after construction (regression) --------------
+
+def test_channels_raised_midrun_pads_idle_columns():
+    """Raising the channel pool after construction pads idle columns
+    (transport.py `_ensure_chan_width`): the padded net must behave
+    exactly like one constructed wide, and the new columns must be
+    usable immediately."""
+    grown, wide = pair_net(2), pair_net(4)
+    for net in (grown, wide):
+        for _ in range(2):
+            net.transfer("a", "b", "blk", 4 * MB)
+    ensure_channel_width(grown, 4)          # the mid-run raise
+    assert int(grown.channels_per_pair) == 4
+    reqs = [("a", "b", "blk", 4 * MB, 4, False, 0.0)] * 4
+    for net in (grown, wide):
+        net.wait_batch(net.transfer_batch(reqs))
+        net.drain()
+    assert grown.trace == wide.trace
+    # the padded columns are real channels: the batch lands on them
+    # instead of queueing behind the two originally-constructed ones
+    post_raise_channels = {row[4] for row in grown.trace[2:]}
+    assert {2, 3} <= post_raise_channels
+
+
+def test_ensure_channel_width_never_lowers():
+    net = pair_net(12)
+    ensure_channel_width(net, 4)
+    assert int(net.channels_per_pair) == 12
+
+
+# ---- the AIMD executor -----------------------------------------------------
+
+def test_adaptive_beats_fixed_width_on_high_bdp_link():
+    fixed_net, adapt_net = pair_net(), pair_net()
+    nbytes = 64 * MB
+    fixed = BulkTransfer(fixed_net, BulkSpec(
+        min_streams=12, max_streams=12, adapt=False,
+        third_party=False)).push("a", "b", nbytes)
+    adaptive = BulkTransfer(adapt_net, BulkSpec(
+        max_streams=64, probe_bytes=4 * MB)).push("a", "b", nbytes)
+    assert fixed.widths == (12,)
+    assert adaptive.widths[0] == 48         # seeded at the BDP grant
+    assert adaptive.elapsed_s < fixed.elapsed_s
+    assert adaptive.throughput_bps > fixed.throughput_bps
+
+
+def test_aimd_grows_then_backs_off_under_nic_congestion():
+    net = pair_net(names=("a", "b", "c"))
+    net.set_nic_budget("a", 200 * MB)       # 3 streams' worth
+    spec = BulkSpec(min_streams=1, max_streams=8, probe_bytes=1 * MB,
+                    grow_step=2)
+    bt = BulkTransfer(net, spec)
+
+    def congest(idx, width, chunk, dt):
+        if idx == 1:
+            # a fat competing flow lands on a's NIC between waves: the
+            # next wave's completion stretches behind its backlog
+            net.transfer("a", "c", "competing", 200 * MB)
+
+    r = bt.push("a", "b", 48 * MB, wave_cb=congest)
+    assert r.widths[0] == 3                 # NIC-clamped grant
+    assert max(r.widths) > 3                # additive increase happened
+    assert any(b < a for a, b in zip(r.widths, r.widths[1:])), \
+        f"no multiplicative backoff in {r.widths}"
+    assert r.nbytes == 48 * MB
+
+
+def test_push_zero_and_send_roundtrip():
+    net = pair_net()
+    bt = BulkTransfer(net)
+    assert bt.push("a", "b", 0).waves == 0
+    r = bt.send("a", "b", b"x" * (2 * MB))
+    assert r.nbytes == 2 * MB and r.elapsed_s > 0
+
+
+# ---- striping width from the granted budget (satellite 1) ------------------
+
+def test_fixed_width_striping_is_bit_identical():
+    """A fixed-width spec (adapt off, max_streams=12) must produce the
+    exact trace of the legacy constant — including with NIC budgets
+    armed, which the fixed mode must not consult."""
+    legacy_net, spec_net = pair_net(), pair_net()
+    for net in (legacy_net, spec_net):
+        net.set_nic_budget("a", 300 * MB)
+    legacy = StripedTransfer(legacy_net)
+    fixed = StripedTransfer(spec_net, spec=NEUTRAL)
+    for size in (0, 1 * KB, 64 * KB, 64 * KB + 1, 1 * MB, 10 * MB + 7):
+        payload = b"z" * size
+        legacy.send("a", "b", payload)
+        fixed.send("a", "b", payload)
+    assert legacy_net.trace == spec_net.trace
+
+
+def test_adaptive_striping_widens_past_the_constant():
+    net = pair_net()
+    st = StripedTransfer(net, spec=BulkSpec(max_streams=64))
+    group = st.begin("a", "b", b"z" * (16 * MB))
+    assert group.plan.n_streams == 48       # BDP grant, not MAX_STRIPES
+    assert int(net.channels_per_pair) >= 48  # pool raised to carry it
+
+
+# ---- the replica fabric: third-party movement ------------------------------
+
+def bulk_login(tmp_path, bulk, tag, maintenance=None):
+    spec = FabricSpec.star(str(tmp_path / f"home-{tag}"),
+                           str(tmp_path / f"site-{tag}"),
+                           replica_latencies={"r1": 0.005, "r2": 0.015},
+                           link=LinkModel(latency_s=0.060))
+    if maintenance is not None:
+        spec = dataclasses.replace(spec, maintenance=maintenance)
+    fab = Fabric(spec)
+    return fab.login("sci", replicas=ReplicaPolicy(sites=("r1", "r2"),
+                                                   bulk=bulk))
+
+
+TP = BulkSpec(min_streams=1, max_streams=12, adapt=False,
+              third_party=True)
+PATH = "home/data/ckpt.bin"
+
+
+def make_r2_stale(s, payload=b"B" * (1 * MB)):
+    """Seed both replicas, then land a new home version that only r1
+    sees (r2 partitioned during the resync) — r2 ends lagging, r1 is a
+    fresh third-party source."""
+    net = s.client.network
+    s.server.store.put(s.token, PATH, b"A" * len(payload))
+    s.replicas.resync()
+    s.server.store.put(s.token, PATH, payload)
+    # cut r2 from BOTH sources: with only home<->r2 down, a third-party
+    # fabric would route the repair around the partition via r1
+    net.partition("home", "r2")
+    net.partition("r1", "r2")
+    s.replicas.resync()
+    net.heal("home", "r2")
+    net.heal("r1", "r2")
+    assert PATH in s.replicas.replicas["r2"].lagging
+    return payload
+
+
+def test_repair_pulls_replica_to_replica(tmp_path):
+    s = bulk_login(tmp_path, TP, "tp")
+    net = s.client.network
+    payload = make_r2_stale(s)
+    before = net.per_pair_bytes.get(("r1", "r2"), 0)
+    pulls0 = s.replicas.third_party_pulls
+    pending = s.replicas.begin_repair_path(PATH)
+    assert [p.src for p in pending] == ["r1"]     # nearer than home
+    for p in pending:
+        net.wait(p.ack)
+        s.replicas.complete_apply(p)
+    assert net.per_pair_bytes[("r1", "r2")] - before >= len(payload)
+    assert s.replicas.third_party_pulls == pulls0 + 1
+    assert net.bytes_third_party >= len(payload)
+    st = s.replicas.replicas["r2"]
+    assert st.store.get(st.token, PATH)[0] == payload
+    assert PATH not in st.lagging
+
+
+def test_third_party_selection_skips_partitioned_sources(tmp_path):
+    s = bulk_login(tmp_path, TP, "tpskip")
+    net = s.client.network
+    make_r2_stale(s)
+    net.partition("r1", "r2")                 # third-party path down
+    src = s.replicas.third_party_source(
+        "r2", PATH, s.server.store.stat(s.token, PATH).version, 1 * MB)
+    assert src == "home"                      # inf-cost candidate skipped
+    net.heal("r1", "r2")
+
+
+def test_fallback_to_mediated_when_source_partitions_mid_pull(tmp_path):
+    s = bulk_login(tmp_path, TP, "tpfall")
+    net = s.client.network
+    payload = make_r2_stale(s)
+    ver = s.server.store.stat(s.token, PATH).version
+    net.partition("r1", "r2")
+    p = s.replicas.begin_apply("r2", PATH, payload, ver,
+                               src="r1", fallback_src="home")
+    assert p is not None and p.src == "home"
+    assert s.replicas.third_party_fallbacks == 1
+    net.wait(p.ack)
+    s.replicas.complete_apply(p)
+    st = s.replicas.replicas["r2"]
+    assert st.store.get(st.token, PATH)[0] == payload
+    # both paths down: the apply defers exactly like the legacy fabric
+    net.partition("home", "r2")
+    p2 = s.replicas.begin_apply("r2", PATH, payload, ver + 1,
+                                src="r1", fallback_src="home")
+    assert p2 is None
+    assert PATH in s.replicas.replicas["r2"].lagging
+    net.heal("home", "r2")
+    net.heal("r1", "r2")
+
+
+def test_read_repair_provenance_and_offload(tmp_path):
+    mediated = bulk_login(tmp_path, None, "cm")
+    third = bulk_login(tmp_path, TP, "tp3")
+    for s in (mediated, third):
+        payload = make_r2_stale(s)
+        net = s.client.network
+        cm0, tp0 = net.bytes_client_mediated, net.bytes_third_party
+        with s.client.open(PATH) as f:
+            assert f.read() == payload
+        net.drain()
+        if s is mediated:
+            # legacy: the reading client pushes the repair bytes
+            assert net.bytes_client_mediated - cm0 >= len(payload)
+            assert s.replicas.third_party_pulls == 0
+        else:
+            # bulk plane: the repair pulls from a storage endpoint
+            assert net.bytes_client_mediated == cm0
+            assert net.bytes_third_party - tp0 >= len(payload)
+            assert s.replicas.third_party_pulls >= 1
+        assert PATH not in s.replicas.replicas["r2"].lagging
+
+
+# ---- scheduler integration: retry ladder, no dead-letter on first failure --
+
+def test_scheduled_resync_retries_without_dead_letter(tmp_path):
+    s = bulk_login(tmp_path, TP, "sched", maintenance=MaintenanceSpec(
+        resync_period_s=5.0, repair_period_s=2.0,
+        lease_period_s=1000.0, reconcile_period_s=1000.0,
+        retry=RetryPolicy(max_retries=3)))
+    net = s.client.network
+    s.server.store.put(s.token, PATH, b"A" * MB)
+    net.partition("site", "home")
+    s.scheduler.run_until(net.clock + 5.5)
+    rep = s.maintenance_report()
+    key = next(k for k in rep.tasks if k.startswith("resync:"))
+    assert rep.tasks[key]["failures"] == 1
+    assert rep.tasks[key]["attempt"] == 1     # on the ladder, not dead
+    assert rep.dead_lettered == 0
+    net.heal("site", "home")
+    s.scheduler.run_until(net.clock + 10.0)
+    rep2 = s.maintenance_report()
+    assert rep2.dead_lettered == 0
+    assert rep2.tasks[key]["attempt"] == 0    # episode closed on success
+    assert s.replicas.catalog.version_at(PATH, "r1") is not None
+
+
+# ---- the zero-cost identity ------------------------------------------------
+
+def _workload_trace(tmp_path, bulk, tag):
+    s = bulk_login(tmp_path, bulk, tag)
+    net = s.client.network
+    payload = make_r2_stale(s)
+    with s.client.open(PATH) as f:
+        assert f.read() == payload
+    for p in s.replicas.begin_repair_path(PATH):
+        net.wait(p.ack)
+        s.replicas.complete_apply(p)
+    with s.client.open("home/data/out.bin", "w") as f:
+        f.write(b"C" * (2 * MB))
+    s.client.sync()
+    net.drain()
+    return list(net.trace)
+
+
+def test_neutral_spec_trace_is_bit_identical_to_unset(tmp_path):
+    """The full gating identity: a fixed-width, third-party-off spec
+    takes exactly the legacy code paths — reads, read repair, repair
+    drain, and flusher fan-out produce the same trace bit-for-bit."""
+    assert _workload_trace(tmp_path, None, "base") == \
+        _workload_trace(tmp_path, NEUTRAL, "neutral")

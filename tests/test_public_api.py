@@ -47,10 +47,17 @@ FAULT_SURFACE = {
     "CrashEvent", "HealEvent",
 }
 
+#: The bulk-transfer plane (docs/transport.md).
+BULK_SURFACE = {
+    "BulkSpec", "BulkTransfer", "BulkResult", "grant_streams",
+    "ensure_channel_width",
+}
+
 
 def test_all_covers_documented_surface():
     missing = (SPEC_SURFACE | CORE_SURFACE | MAINTENANCE_SURFACE
-               | CONFLICT_SURFACE | FAULT_SURFACE) - set(core.__all__)
+               | CONFLICT_SURFACE | FAULT_SURFACE
+               | BULK_SURFACE) - set(core.__all__)
     assert not missing, f"repro.core.__all__ lost exports: {sorted(missing)}"
 
 
@@ -88,9 +95,15 @@ def test_spec_layer_signatures_are_stable():
             "reconcile_period_s", "retry", "lock_lease_s"} <= m_fields
     r_fields = set(core.MaintenanceReport.__dataclass_fields__)
     assert {"tasks_run", "retries", "dead_lettered", "lock_conflicts",
-            "repairs", "double_repairs", "evictions",
-            "conflicts"} <= r_fields
+            "repairs", "double_repairs", "evictions", "conflicts",
+            "bytes_third_party", "bytes_client_mediated"} <= r_fields
     assert "write_lease" in policy_fields
+    assert "bulk" in policy_fields
+    assert "bulk" in spec_fields
+    b_fields = set(core.BulkSpec.__dataclass_fields__)
+    assert {"min_streams", "max_streams", "probe_bytes", "adapt",
+            "third_party", "grow_step", "backoff", "improve_threshold",
+            "degrade_threshold"} <= b_fields
     lease_fields = set(core.WriteLeaseSpec.__dataclass_fields__)
     assert {"ttl_s"} <= lease_fields
     c_fields = set(core.ConflictRecord.__dataclass_fields__)
